@@ -1,0 +1,83 @@
+"""Paper Figure 5: the covar-matrix batch under increasing optimization.
+
+  per_query    one compile+run per query, nothing shared (the AC/DC-like
+               interpreted proxy: no cross-query view sharing)
+  single_root  one batch, shared views, all queries at one root
+  multi_root   + find-roots (the paper's 2-5x layer)
+  parallel     + domain parallelism over 4 host devices (subprocess)
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import BENCH_SCALE, row, timeit
+from repro.core import Engine
+from repro.data import datasets as D
+from repro.ml.covar import covar_queries
+
+
+def main():
+    name = os.environ.get("ABLATION_DATASET", "favorita")
+    ds = D.make(name, scale=BENCH_SCALE)
+    qs, _ = covar_queries(ds)
+    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
+    lines = []
+
+    # per-query: no sharing across queries
+    batches = [eng.compile([q]) for q in qs]
+    t_pq = timeit(lambda: [b(ds.db) for b in batches], warmup=1, iters=2)
+    lines.append(row(f"f5/{name}/per_query", t_pq, f"queries={len(qs)}"))
+
+    b_sr = eng.compile(qs, multi_root=False)
+    t_sr = timeit(lambda: b_sr(ds.db))
+    lines.append(row(f"f5/{name}/single_root", t_sr,
+                     f"V={b_sr.stats.n_views};speedup={t_pq / t_sr:.1f}x"))
+
+    b_mr = eng.compile(qs, multi_root=True)
+    t_mr = timeit(lambda: b_mr(ds.db))
+    lines.append(row(f"f5/{name}/multi_root", t_mr,
+                     f"V={b_mr.stats.n_views};speedup={t_sr / t_mr:.2f}x"))
+
+    # parallel: shard_map over 4 forced host devices (own process)
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import time, jax
+from repro.core import Engine
+from repro.data import datasets as D
+from repro.ml.covar import covar_queries
+ds = D.make({name!r}, scale={BENCH_SCALE})
+qs, _ = covar_queries(ds)
+eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
+b = eng.compile(qs, multi_root=True)
+mesh = jax.make_mesh((4,), ("data",))
+from repro.core.distributed import sharded_runner
+fn, cols = sharded_runner(b.plan, ds.db, mesh, "data",
+                          max(ds.db.sizes(), key=lambda k: ds.db.sizes()[k]))
+jax.block_until_ready(fn(cols, {{}}))   # warmup/compile once
+t0 = time.perf_counter()
+for _ in range(3):
+    out = fn(cols, {{}})
+    jax.block_until_ready(out)
+print((time.perf_counter() - t0) / 3)
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    try:
+        out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                             env=env, capture_output=True, text=True, timeout=600)
+        t_par = float(out.stdout.strip().splitlines()[-1])
+        lines.append(row(f"f5/{name}/parallel4", t_par,
+                         f"speedup={t_mr / t_par:.2f}x"))
+    except Exception as e:  # pragma: no cover
+        lines.append(row(f"f5/{name}/parallel4", 0.0, f"failed:{e}"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,51 @@
+"""Kernel micro-bench: Pallas (interpret) vs jnp oracle vs jit'd oracle.
+
+On this CPU container interpret mode is a correctness vehicle, not a speed
+one; the derived column records allclose deltas so the bench doubles as a
+regression gate.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.kernels import ops, ref
+
+
+def main():
+    rng = np.random.default_rng(0)
+    lines = []
+
+    x = jnp.asarray(rng.normal(size=(4096, 64)).astype(np.float32))
+    w = jnp.ones(4096, jnp.float32)
+    t_ref = timeit(lambda: ref.covar_xtx_ref(x, w).block_until_ready())
+    t_pal = timeit(lambda: ops.covar_xtx(x, w, interpret=True).block_until_ready())
+    err = float(jnp.max(jnp.abs(ops.covar_xtx(x, w, interpret=True)
+                                - ref.covar_xtx_ref(x, w))))
+    lines.append(row("kern/covar_xtx/ref", t_ref, "4096x64"))
+    lines.append(row("kern/covar_xtx/pallas_interpret", t_pal, f"maxerr={err:.1e}"))
+
+    seg = jnp.asarray(rng.integers(0, 64, 8192).astype(np.int32))
+    pay = jnp.asarray(rng.normal(size=(8192, 8)).astype(np.float32))
+    t_ref = timeit(lambda: ref.seg_aggregate_ref(seg, pay, 64).block_until_ready())
+    t_pal = timeit(lambda: ops.seg_aggregate(seg, pay, 64, interpret=True)
+                   .block_until_ready())
+    lines.append(row("kern/seg_aggregate/ref", t_ref, "8192x8,S=64"))
+    lines.append(row("kern/seg_aggregate/pallas_interpret", t_pal, ""))
+
+    q = jnp.asarray(rng.normal(size=(1, 4, 256, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 32)).astype(np.float32))
+    t_ref = timeit(lambda: ref.attention_ref(q, k, v, causal=True).block_until_ready())
+    t_pal = timeit(lambda: ops.flash_attention(q, k, v, causal=True, block_q=64,
+                                               block_k=64, interpret=True)
+                   .block_until_ready())
+    lines.append(row("kern/flash_attention/ref", t_ref, "S=256"))
+    lines.append(row("kern/flash_attention/pallas_interpret", t_pal, ""))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,54 @@
+"""Paper Table 2: per-workload layer statistics — application aggregates (A),
+intermediate aggregates synthesized by the engine (I), merged views (V), and
+view groups (G) for each dataset × workload."""
+
+from __future__ import annotations
+
+from benchmarks.common import BENCH_SCALE, row
+from repro.core import Engine
+from repro.data import datasets as D
+from repro.ml import chowliu, cubes, trees
+from repro.ml.covar import covar_queries
+from benchmarks.bench_table3_aggregates import CUBE_DIMS, MI_ATTRS
+
+
+def stats_for(ds, queries):
+    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
+    b = eng.compile(queries)
+    s = b.stats
+    return s
+
+
+def main():
+    lines = []
+    for name in ["favorita", "retailer", "yelp", "tpcds"]:
+        ds = D.make(name, scale=BENCH_SCALE)
+
+        qs, _ = covar_queries(ds)
+        s = stats_for(ds, qs)
+        lines.append(row(f"t2/{name}/CM", 0.0,
+                         f"A={s.n_app_aggregates};I={s.n_intermediate_cols};"
+                         f"V={s.n_views};G={s.n_groups};premerge={s.n_views_premerge}"))
+
+        dt = trees.DecisionTree(ds, task="regression", max_depth=1,
+                                min_instances=10, max_nodes=1)
+        s = dt.batch.stats
+        lines.append(row(f"t2/{name}/RT", 0.0,
+                         f"A={s.n_app_aggregates};I={s.n_intermediate_cols};"
+                         f"V={s.n_views};G={s.n_groups};premerge={s.n_views_premerge}"))
+
+        s = stats_for(ds, chowliu.mi_queries(MI_ATTRS[name]))
+        lines.append(row(f"t2/{name}/MI", 0.0,
+                         f"A={s.n_app_aggregates};I={s.n_intermediate_cols};"
+                         f"V={s.n_views};G={s.n_groups};premerge={s.n_views_premerge}"))
+
+        dims, meas = CUBE_DIMS[name]
+        s = stats_for(ds, cubes.cube_queries(dims, meas))
+        lines.append(row(f"t2/{name}/DC", 0.0,
+                         f"A={s.n_app_aggregates};I={s.n_intermediate_cols};"
+                         f"V={s.n_views};G={s.n_groups};premerge={s.n_views_premerge}"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

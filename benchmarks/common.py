@@ -1,0 +1,32 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Tuple
+
+BENCH_SCALE = float(os.environ.get("BENCH_SCALE", "0.1"))
+
+
+def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds over ``iters`` runs (after warmup).  Blocks on
+    JAX async dispatch so device work is actually measured."""
+    import jax
+
+    def run():
+        return jax.block_until_ready(fn())
+
+    for _ in range(warmup):
+        run()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

@@ -1,0 +1,86 @@
+"""§Perf hillclimb — Cell A: the paper's flagship workload (covar batch).
+
+Hypothesis → change → measure loop on real CPU wall-clock (the engine is the
+one component that *runs* here, not just lowers).  Results append to
+EXPERIMENTS.md §Perf by hand; JSON to reports/perf_engine.json.
+
+    PYTHONPATH=src python -m benchmarks.perf_engine [--scale 1.0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import Engine
+from repro.data import datasets as D
+from repro.ml.covar import assemble_covar, covar_queries
+from repro.ml.covar_fused import compute_covar_fused, supports_fused
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--dataset", default="favorita")
+    args = ap.parse_args(argv)
+
+    ds = D.make(args.dataset, scale=args.scale)
+    qs, layout = covar_queries(ds)
+    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
+    results = {}
+    n_fact = ds.db.relation(ds.fact).n_rows
+    print(f"[perf] dataset={args.dataset} scale={args.scale} "
+          f"fact_rows={n_fact:,} p={layout.p}")
+
+    # -- baseline: paper-faithful engine path (multi-root, block 4096) -------
+    b0 = eng.compile(qs, multi_root=True, block_size=4096)
+    out0 = b0(ds.db)
+    C0, N0 = assemble_covar({k: np.asarray(v) for k, v in out0.items()}, layout)
+    t0 = timeit(lambda: b0(ds.db))
+    results["baseline_block4096"] = t0
+    print(f"[perf] baseline (engine, multi-root, block=4096): {t0:.3f}s")
+
+    # -- iteration 1: block size ---------------------------------------------
+    for bs in (1024, 16384, 65536):
+        bb = eng.compile(qs, multi_root=True, block_size=bs)
+        bb(ds.db)
+        t = timeit(lambda: bb(ds.db))
+        results[f"block{bs}"] = t
+        print(f"[perf] block_size={bs}: {t:.3f}s ({t0 / t:.2f}x vs baseline)")
+
+    # -- iteration 2: single-root ablation (negative control) ----------------
+    bsr = eng.compile(qs, multi_root=False, block_size=4096)
+    bsr(ds.db)
+    t = timeit(lambda: bsr(ds.db))
+    results["single_root"] = t
+    print(f"[perf] single-root: {t:.3f}s ({t0 / t:.2f}x vs baseline)")
+
+    # -- iteration 3: beyond-paper fused gathered XtX -------------------------
+    if supports_fused(ds):
+        from repro.ml.covar_fused import make_fused_covar
+        for fbs in (8192, 32768):
+            fn, _ = make_fused_covar(ds, layout, block_size=fbs)
+            C1 = np.asarray(fn(), np.float64)
+            err = np.abs(C1 - C0).max() / max(1.0, np.abs(C0).max())
+            assert err < 1e-4, f"fused path disagrees with engine ({err})"
+            t = timeit(fn)
+            results[f"fused_xtx_block{fbs}"] = t
+            print(f"[perf] fused gathered-XtX block={fbs}: {t:.3f}s "
+                  f"({t0 / t:.2f}x vs baseline, correct to {err:.1e})")
+    else:
+        print("[perf] fused path unsupported (many-to-many joins)")
+
+    os.makedirs("reports", exist_ok=True)
+    with open("reports/perf_engine.json", "w") as f:
+        json.dump({"dataset": args.dataset, "scale": args.scale,
+                   "fact_rows": n_fact, "results": results}, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

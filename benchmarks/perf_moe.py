@@ -1,0 +1,65 @@
+"""§Perf hillclimb — Cell C: qwen3-moe-235b train_4k (collective-bound).
+
+Levers on the collective term (napkin math in EXPERIMENTS.md §Perf):
+
+  H1  sequence-parallel OFF    — block boundaries stop resharding seq over
+      'model'; removes per-layer seq all-gathers but raises activation
+      memory (negative control on memory term)
+  H2  capacity dim replicated  — MoE buckets stop sharding over 'data';
+      removes the dispatch resharding collectives, costs bucket memory
+  H3  bf16 dispatch one-hot    — memory lever, collective-neutral
+  H4  best combination
+
+    PYTHONPATH=src python -m benchmarks.perf_moe
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.perf_ssd import run_variant, terms
+from benchmarks.roofline import extrapolate, measure_costs
+
+
+def run_rules_variant(arch, shape, name, overrides, rules_patch):
+    from repro import configs
+    from repro.distributed.sharding import rules_for
+    from repro.launch.mesh import make_production_mesh
+    import os as _os
+    cfg = configs.get(arch)
+    # rules built against the single-pod mesh + patch
+    import jax
+    mesh = make_production_mesh(multi_pod=False)
+    rules = dict(rules_for(mesh))
+    rules.update(rules_patch)
+    c1 = measure_costs(arch, shape, 1, overrides=overrides, rules=rules)
+    c2 = measure_costs(arch, shape, 3, overrides=overrides, rules=rules)
+    costs = extrapolate(c1, c2, 1, 3, cfg.n_layers)
+    t = terms(costs)
+    dom = max(t, key=t.get)
+    print(f"[perf-moe] {name:28s} comp={t['compute']:.3e}s mem={t['memory']:.3e}s "
+          f"coll={t['collective']:.3e}s dom={dom}", flush=True)
+    return {"name": name, "terms": t, "dominant": dom, "costs": costs}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-235b-a22b")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args(argv)
+
+    out = []
+    out.append(run_rules_variant(args.arch, args.shape, "baseline", {}, {}))
+    out.append(run_rules_variant(args.arch, args.shape, "H1_no_seq_parallel",
+                                 {}, {"seq": None}))
+    out.append(run_rules_variant(args.arch, args.shape, "H2_capacity_replicated",
+                                 {}, {"capacity": None}))
+    os.makedirs("reports", exist_ok=True)
+    with open(f"reports/perf_moe_{args.arch}_{args.shape}.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

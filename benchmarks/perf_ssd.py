@@ -1,0 +1,65 @@
+"""§Perf hillclimb — Cell B: mamba2-2.7b prefill_32k (memory-bound SSD).
+
+The roofline showed the SSD dual form's decay/score matrices dominate HBM
+traffic.  Candidate levers, napkin-math first (see EXPERIMENTS.md §Perf):
+
+  H1  bf16 dual-form matrices  — L/w traffic halves       (predict mem ≈ −35%)
+  H2  smaller chunk Q=64       — L bytes ∝ S·Q per layer  (predict mem ≈ −25%,
+      but more inter-chunk state steps)
+  H3  larger chunk Q=256       — negative control (mem should RISE)
+  H4  H1+H2 combined
+
+    PYTHONPATH=src python -m benchmarks.perf_ssd [--arch mamba2-2.7b --shape prefill_32k]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS, extrapolate,
+                                 measure_costs)
+
+
+def terms(costs):
+    return {"compute": costs["flops"] / PEAK_FLOPS,
+            "memory": costs["bytes"] / HBM_BW,
+            "collective": costs["coll"] / LINK_BW}
+
+
+def run_variant(arch, shape, name, overrides):
+    from repro import configs
+    cfg = configs.get(arch)
+    c1 = measure_costs(arch, shape, 1, overrides=overrides)
+    c2 = measure_costs(arch, shape, 3, overrides=overrides)
+    costs = extrapolate(c1, c2, 1, 3, cfg.n_layers)
+    t = terms(costs)
+    dom = max(t, key=t.get)
+    print(f"[perf-ssd] {name:28s} comp={t['compute']:.3e}s mem={t['memory']:.3e}s "
+          f"coll={t['collective']:.3e}s dom={dom}", flush=True)
+    return {"name": name, "overrides": {k: str(v) for k, v in overrides.items()},
+            "terms": t, "dominant": dom, "costs": costs}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-2.7b")
+    ap.add_argument("--shape", default="prefill_32k")
+    args = ap.parse_args(argv)
+
+    variants = [
+        ("baseline_f32_Q128", {}),
+        ("H1_bf16_dual", {"ssd_bf16": True}),
+        ("H2_chunk64", {"ssm_chunk": 64}),
+        ("H3_chunk256_negctl", {"ssm_chunk": 256}),
+        ("H4_bf16_chunk64", {"ssd_bf16": True, "ssm_chunk": 64}),
+    ]
+    out = [run_variant(args.arch, args.shape, n, o) for n, o in variants]
+    os.makedirs("reports", exist_ok=True)
+    with open(f"reports/perf_ssd_{args.arch}_{args.shape}.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+reports/dryrun/*.json and reports/roofline/*.json.
+
+    PYTHONPATH=src python -m benchmarks.report_experiments
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARCHS = ["zamba2-1.2b", "llama-3.2-vision-90b", "mamba2-2.7b",
+         "qwen3-moe-235b-a22b", "deepseek-v2-lite-16b", "h2o-danube-3-4b",
+         "minicpm-2b", "internlm2-1.8b", "llama3-8b", "whisper-small"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def _load(path):
+    try:
+        return json.load(open(path))
+    except Exception:
+        return None
+
+
+def _fmt_b(x):
+    if x >= 1e9:
+        return f"{x / 1e9:.2f} GB"
+    if x >= 1e6:
+        return f"{x / 1e6:.1f} MB"
+    return f"{x / 1e3:.0f} KB"
+
+
+def dryrun_table(d="reports/dryrun"):
+    lines = ["| arch | shape | mesh | status | compile s | HLO flops/dev | "
+             "HLO bytes/dev | collective B/dev | temp bytes/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCHS:
+        for s in SHAPES:
+            for m in ("single", "multi"):
+                r = _load(os.path.join(d, f"{a}__{s}__{m}.json"))
+                if r is None:
+                    lines.append(f"| {a} | {s} | {m} | MISSING | | | | | |")
+                    continue
+                if r["status"] == "skipped":
+                    lines.append(f"| {a} | {s} | {m} | skipped | | | | | "
+                                 f"{r['why']} |"[:-2] + "|")
+                    continue
+                cost = r.get("cost", {})
+                coll = r.get("collectives", {})
+                mem = r.get("memory", {}) if isinstance(r.get("memory"), dict) else {}
+                lines.append(
+                    f"| {a} | {s} | {m} | {r['status']} | {r.get('compile_s', '')} "
+                    f"| {cost.get('flops', 0):.3e} | {cost.get('bytes accessed', 0):.3e} "
+                    f"| {coll.get('total', 0):.3e} | {_fmt_b(mem.get('temp_bytes', 0))} |")
+    return "\n".join(lines)
+
+
+def roofline_table(d="reports/roofline"):
+    lines = ["| arch | shape | compute s | memory s | collective s | dominant "
+             "| MODEL/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    fracs = []
+    for a in ARCHS:
+        for s in SHAPES:
+            r = _load(os.path.join(d, f"{a}__{s}.json"))
+            if r is None:
+                lines.append(f"| {a} | {s} | pending | | | | | |")
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {a} | {s} | — | — | — | — | — | skip (full attn) |")
+                continue
+            t = r["terms_s"]
+            fracs.append((r["roofline_fraction"], a, s, r["dominant"]))
+            lines.append(
+                f"| {a} | {s} | {t['compute']:.3e} | {t['memory']:.3e} | "
+                f"{t['collective']:.3e} | **{r['dominant']}** | "
+                f"{r['useful_flop_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    summary = ""
+    if fracs:
+        fracs.sort()
+        worst = fracs[:3]
+        summary = ("\n\nWorst roofline fractions (hillclimb candidates): " +
+                   "; ".join(f"{a}/{s} = {f:.3f} ({d}-bound)"
+                             for f, a, s, d in worst))
+    return "\n".join(lines) + summary
+
+
+def main():
+    print("## §Dry-run\n")
+    print(dryrun_table())
+    print("\n## §Roofline\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

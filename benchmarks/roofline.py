@@ -1,0 +1,262 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+    compute    term = HLO_FLOPs / (chips × 197 TF/s bf16)
+    memory     term = HLO_bytes / (chips × 819 GB/s HBM)
+    collective term = collective_bytes / (chips × 50 GB/s ICI link)
+
+XLA's cost analysis counts while-loop bodies ONCE (verified), so the scanned
+production build under-reports loop costs.  This harness therefore lowers
+each cell twice at small *unrolled* depths (scan_unroll=True, single-chunk CE,
+dense attention, no grad-accum loop) and extrapolates per-layer costs
+linearly to the full depth — per-layer HLO is depth-invariant, so the
+two-point fit is exact up to the constant (embedding/head) term.
+
+    PYTHONPATH=src python -m benchmarks.roofline --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m benchmarks.roofline --table   # aggregate markdown
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12     # bf16 / chip (TPU v5e-class, per brief)
+HBM_BW = 819e9          # B/s per chip
+LINK_BW = 50e9          # B/s per ICI link
+
+
+def measure_costs(arch: str, shape_name: str, n_layers: int,
+                  enc_layers: Optional[int] = None,
+                  overrides: Optional[Dict[str, Any]] = None,
+                  rules=None) -> Dict[str, float]:
+    """Lower+compile one unrolled measurement build; return per-device costs."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import configs
+    from repro.configs.shapes import SHAPES
+    from repro.distributed.sharding import param_pspecs, rules_for, spec_for
+    from repro.launch.dryrun import collective_bytes_from_hlo, input_specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import model as M
+    from repro.models.layers import abstract_params
+    from repro.serve.engine import make_serve_step
+    from repro.train.step import (TrainConfig, abstract_state, batch_pspecs,
+                                  make_prefill_step, make_train_step,
+                                  state_pspecs)
+
+    # measurement build: unrolled scans, the *deployed* chunked attention
+    # (bigger chunks keep unrolled HLO small), single-chunk CE, no accum loop
+    cfg = configs.get(arch).with_(scan_unroll=True, n_layers=n_layers,
+                                  attn_chunk=4096)
+    if enc_layers is not None:
+        cfg = cfg.with_(encoder_layers=enc_layers)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    rules = rules or rules_for(mesh)
+    tcfg = TrainConfig(ce_chunk=shape.seq_len, grad_accum=1, attn_impl="chunked")
+    shardify = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+
+    if shape.kind == "train" and shape.name != "prefill_32k":
+        step = make_train_step(cfg, tcfg, mesh, rules=rules)
+        jitted = jax.jit(step, in_shardings=(
+            shardify(state_pspecs(cfg, tcfg, mesh)),
+            shardify(batch_pspecs(cfg, mesh))), donate_argnums=(0,))
+        lowered = jitted.lower(abstract_state(cfg, tcfg),
+                               input_specs(cfg, shape, mesh))
+    elif shape.name == "prefill_32k":
+        step = make_prefill_step(cfg, tcfg, mesh, rules=rules)
+        jitted = jax.jit(step, in_shardings=(
+            shardify(param_pspecs(M.model_specs(cfg), rules, mesh)),
+            shardify(batch_pspecs(cfg, mesh))))
+        lowered = jitted.lower(abstract_params(M.model_specs(cfg), cfg.jdtype),
+                               input_specs(cfg, shape, mesh))
+    else:
+        step = make_serve_step(cfg, mesh)
+        ins = input_specs(cfg, shape, mesh)
+        cspec = param_pspecs(M.cache_specs(cfg, shape.global_batch, shape.seq_len),
+                             rules, mesh)
+        in_sh = (shardify(param_pspecs(M.model_specs(cfg), rules, mesh)),
+                 shardify(cspec),
+                 NamedSharding(mesh, spec_for(("batch", None), rules,
+                                              ins["tokens"].shape, mesh)),
+                 NamedSharding(mesh, P()))
+        args = (abstract_params(M.model_specs(cfg), cfg.jdtype), ins["cache"],
+                ins["tokens"], ins["pos"])
+        if "context" in ins:
+            in_sh = in_sh + (NamedSharding(
+                mesh, spec_for(("batch", None, None), rules,
+                               ins["context"].shape, mesh)),)
+            args = args + (ins["context"],)
+        jitted = jax.jit(step, in_shardings=in_sh)
+        lowered = jitted.lower(*args)
+
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    cost = dict(cost or {})
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll["total"]),
+            "coll_ar": float(coll["all-reduce"]),
+            "coll_ag": float(coll["all-gather"]),
+            "coll_rs": float(coll["reduce-scatter"]),
+            "coll_a2a": float(coll["all-to-all"]),
+            "coll_cp": float(coll["collective-permute"])}
+
+
+def layer_points(cfg) -> Tuple[Dict, Dict, float, float]:
+    """Two measurement depths + their 'unit' counts for extrapolation."""
+    fam = cfg.family
+    if fam == "hybrid":
+        tail = cfg.n_layers % cfg.attn_every
+        u1, u2 = 1, 2
+        L1, L2 = cfg.attn_every * u1 + tail, cfg.attn_every * u2 + tail
+        units_full = cfg.n_layers // cfg.attn_every
+    elif fam == "vlm":
+        u1, u2 = 1, 2
+        L1, L2 = cfg.cross_every * u1, cfg.cross_every * u2
+        units_full = cfg.n_layers // cfg.cross_every
+    else:
+        u1, u2 = 1, 3
+        L1, L2 = 1, 3
+        units_full = cfg.n_layers
+    return L1, L2, (u1, u2), units_full
+
+
+def extrapolate(c1: Dict[str, float], c2: Dict[str, float], u1: float, u2: float,
+                units_full: float) -> Dict[str, float]:
+    out = {}
+    for k in c1:
+        delta = (c2[k] - c1[k]) / (u2 - u1)
+        out[k] = max(c1[k] + delta * (units_full - u1), 0.0)
+    return out
+
+
+def roofline_cell(arch: str, shape_name: str) -> Dict[str, Any]:
+    from repro import configs
+    from repro.configs.shapes import SHAPES, applicable
+
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "why": why}
+
+    t0 = time.time()
+    if cfg.family == "audio" and shape.kind == "train":
+        c11 = measure_costs(arch, shape_name, 1, enc_layers=1)
+        c31 = measure_costs(arch, shape_name, 3, enc_layers=1)
+        c13 = measure_costs(arch, shape_name, 1, enc_layers=3)
+        dec = {k: (c31[k] - c11[k]) / 2 for k in c11}
+        enc = {k: (c13[k] - c11[k]) / 2 for k in c11}
+        costs = {k: max(c11[k] + dec[k] * (cfg.n_layers - 1)
+                        + enc[k] * (cfg.encoder_layers - 1), 0.0) for k in c11}
+    else:
+        L1, L2, (u1, u2), units_full = layer_points(cfg)
+        c1 = measure_costs(arch, shape_name, L1)
+        c2 = measure_costs(arch, shape_name, L2)
+        costs = extrapolate(c1, c2, u1, u2, units_full)
+
+    n_dev = 256
+    t_comp = costs["flops"] / PEAK_FLOPS
+    t_mem = costs["bytes"] / HBM_BW
+    t_coll = costs["coll"] / LINK_BW
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+
+    # MODEL_FLOPS: 6·N·D train, 2·N·D forward-only (prefill/decode)
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else 1)
+    mult = 6.0 if (shape.kind == "train" and shape.name != "prefill_32k") else 2.0
+    model_flops = mult * n_active * tokens
+    hlo_flops_global = costs["flops"] * n_dev
+    useful = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+    t_useful = model_flops / (n_dev * PEAK_FLOPS)
+    bottleneck_t = max(t_comp, t_mem, t_coll)
+    frac = t_useful / bottleneck_t if bottleneck_t > 0 else 0.0
+
+    return {"arch": arch, "shape": shape_name, "status": "ok",
+            "measure_s": round(time.time() - t0, 1),
+            "per_device": costs,
+            "terms_s": {"compute": t_comp, "memory": t_mem, "collective": t_coll},
+            "dominant": dominant,
+            "model_flops": model_flops,
+            "hlo_flops_global": hlo_flops_global,
+            "useful_flop_ratio": useful,
+            "roofline_fraction": frac}
+
+
+LEVERS = {
+    "compute": "cut recompute (remat policy) / raise MXU utilization via fusion",
+    "memory": "widen arithmetic intensity: fuse elementwise chains, bf16 "
+              "intermediates, larger effective tiles",
+    "collective": "reshard to cut all-gathers (sequence- vs tensor-parallel "
+                  "balance), overlap collectives with compute",
+}
+
+
+def write_table(report_dir: str, out_md: str):
+    import glob
+    rows = []
+    for f in sorted(glob.glob(os.path.join(report_dir, "*.json"))):
+        rows.append(json.load(open(f)))
+    lines = ["| arch | shape | compute s | memory s | collective s | dominant | "
+             "MODEL/HLO flops | roofline frac | lever |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | "
+                         f"{r['why']} |")
+            continue
+        if r.get("status") != "ok":
+            continue
+        t = r["terms_s"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute']:.3e} | {t['memory']:.3e} "
+            f"| {t['collective']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_flop_ratio']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {LEVERS[r['dominant']]} |")
+    md = "\n".join(lines)
+    with open(out_md, "w") as f:
+        f.write(md + "\n")
+    print(md)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--out", default="reports/roofline")
+    ap.add_argument("--table", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.table:
+        write_table(args.out, os.path.join(args.out, "roofline_table.md"))
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    rec = roofline_cell(args.arch, args.shape)
+    tag = f"{args.arch}__{args.shape}"
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec["status"] == "ok":
+        t = rec["terms_s"]
+        print(f"[roofline] {tag}: comp={t['compute']:.3e}s mem={t['memory']:.3e}s "
+              f"coll={t['collective']:.3e}s dom={rec['dominant']} "
+              f"frac={rec['roofline_fraction']:.3f}", flush=True)
+    else:
+        print(f"[roofline] {tag}: {rec['status']} {rec.get('why', '')}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  BENCH_SCALE env (default 0.1)
+scales the synthetic datasets.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_fig5_ablation, bench_kernels,
+                            bench_table2_views, bench_table3_aggregates,
+                            bench_table45_training)
+    print("name,us_per_call,derived")
+    ok = True
+    for mod in [bench_table2_views, bench_table3_aggregates,
+                bench_table45_training, bench_fig5_ablation, bench_kernels]:
+        try:
+            for line in mod.main():
+                print(line, flush=True)
+        except Exception:
+            ok = False
+            print(f"{mod.__name__},0,FAILED", flush=True)
+            traceback.print_exc()
+
+    # dry-run + roofline tables (read from reports/, written by
+    # repro.launch.dryrun --all and benchmarks.roofline)
+    try:
+        import os
+        if os.path.isdir("reports/dryrun"):
+            from benchmarks import report_experiments
+            print()
+            report_experiments.main()
+    except Exception:
+        traceback.print_exc()
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,20 @@
+"""Batched serving example: greedy decode with KV caches.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch llama3-8b
+"""
+
+import argparse
+
+from repro.launch import serve as serve_launch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    args = ap.parse_args()
+    serve_launch.main(["--arch", args.arch, "--batch", "4",
+                       "--prompt-len", "8", "--gen", "24"])
+
+
+if __name__ == "__main__":
+    main()

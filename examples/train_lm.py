@@ -1,0 +1,43 @@
+"""End-to-end LM training driver (~100M params, a few hundred steps).
+
+    PYTHONPATH=src python examples/train_lm.py            # ~100M, 200 steps
+    PYTHONPATH=src python examples/train_lm.py --quick    # tiny, 60 steps
+
+Exercises the full training substrate: deterministic pipeline, AdamW + cosine
+schedule, chunked CE, fault-tolerant loop with checkpoints (kill it mid-run
+and rerun — it resumes bit-identically).
+"""
+
+import argparse
+import sys
+
+from repro.launch import train as train_launch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm_ckpt")
+    args = ap.parse_args()
+
+    if args.quick:
+        argv = ["--arch", args.arch, "--smoke", "--steps", "60",
+                "--batch", "8", "--seq", "64", "--lr", "3e-3",
+                "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "20"]
+    else:
+        # ~100M params: d=768, 12L, ff=2048, vocab=32000 (tied embeddings)
+        # a few hundred steps; resumable mid-run (CPU: ~10s/step)
+        argv = ["--arch", args.arch, "--smoke", "--steps", "200",
+                "--batch", "8", "--seq", "128", "--lr", "1e-3",
+                "--d-model", "768", "--layers", "12", "--heads", "12",
+                "--d-ff", "2048", "--vocab", "32000",
+                "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50"]
+    loop = train_launch.main(argv)
+    losses = loop.losses()
+    assert losses[-1] < losses[0], "loss should decrease"
+    print(f"[example] OK: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

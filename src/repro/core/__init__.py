@@ -1,0 +1,22 @@
+"""LMFAO core: the paper's layered aggregate engine in JAX.
+
+Layers (paper Fig. 1): join tree -> find roots -> aggregate pushdown
+(directional views) -> merge views -> group views -> multi-output plans ->
+parallelization (shard_map) -> code generation (jit/XLA).
+"""
+
+from repro.core.aggregates import (Aggregate, Constant, Delta, Lambda, Param,
+                                   Pow, ProductAgg, Query, Term, Var, agg,
+                                   COUNT, query, sum_of, sum_prod, sum_sq)
+from repro.core.engine import BatchStats, CompiledBatch, Engine
+from repro.core.jointree import JoinTree, materialize_bag
+from repro.core.schema import (Attribute, DatabaseSchema, RelationSchema,
+                               CATEGORICAL, CONTINUOUS, KEY, schema)
+
+__all__ = [
+    "Aggregate", "Constant", "Delta", "Lambda", "Param", "Pow", "ProductAgg",
+    "Query", "Term", "Var", "agg", "COUNT", "query", "sum_of", "sum_prod",
+    "sum_sq", "BatchStats", "CompiledBatch", "Engine", "JoinTree",
+    "materialize_bag", "Attribute", "DatabaseSchema", "RelationSchema",
+    "CATEGORICAL", "CONTINUOUS", "KEY", "schema",
+]

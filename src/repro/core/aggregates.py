@@ -1,0 +1,239 @@
+"""The LMFAO aggregate DSL: sums of products of user-defined functions.
+
+Every aggregate is  α = Σ_{j∈[s]} Π_{k∈[p_j]} f_jk  (paper §1.1).  Terms
+evaluate against an *environment* mapping attribute names to broadcastable
+arrays; the multi-output executor provides row columns and pulled-up domain
+axes through the same interface, so a term never knows whether its attribute
+is a scanned column or a pulled group-by dimension.
+
+Dynamic UDAFs (paper §1.2 "dynamic functions", used by decision trees) are
+expressed with :class:`Param` references resolved from a runtime params dict —
+traced by JAX, so changing a threshold never triggers recompilation (DESIGN.md
+§7.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, FrozenSet, Mapping, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+Env = Mapping[str, jnp.ndarray]
+Params = Mapping[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """Reference to a runtime parameter (dynamic UDAF input)."""
+
+    name: str
+
+
+def _resolve(v, params: Params):
+    if isinstance(v, Param):
+        return params[v.name]
+    return v
+
+
+class Term:
+    """A function f(attrs...) appearing in a product."""
+
+    def attrs(self) -> FrozenSet[str]:
+        raise NotImplementedError
+
+    def evaluate(self, env: Env, params: Params) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def key(self) -> Tuple:
+        """Structural identity for view merging/dedup."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Constant(Term):
+    value: object = 1.0  # float or Param
+
+    def attrs(self) -> FrozenSet[str]:
+        return frozenset()
+
+    def evaluate(self, env: Env, params: Params) -> jnp.ndarray:
+        return jnp.asarray(_resolve(self.value, params), dtype=jnp.float32)
+
+    def key(self) -> Tuple:
+        return ("const", self.value)
+
+
+@dataclasses.dataclass(frozen=True)
+class Var(Term):
+    """Identity f(X) = X."""
+
+    attr: str
+
+    def attrs(self) -> FrozenSet[str]:
+        return frozenset([self.attr])
+
+    def evaluate(self, env: Env, params: Params) -> jnp.ndarray:
+        return env[self.attr].astype(jnp.float32)
+
+    def key(self) -> Tuple:
+        return ("var", self.attr)
+
+
+@dataclasses.dataclass(frozen=True)
+class Pow(Term):
+    """f(X) = X**k."""
+
+    attr: str
+    k: int
+
+    def attrs(self) -> FrozenSet[str]:
+        return frozenset([self.attr])
+
+    def evaluate(self, env: Env, params: Params) -> jnp.ndarray:
+        x = env[self.attr].astype(jnp.float32)
+        return x ** self.k
+
+    def key(self) -> Tuple:
+        return ("pow", self.attr, self.k)
+
+
+_OPS: Dict[str, Callable] = {
+    "<=": lambda x, t: x <= t,
+    "<": lambda x, t: x < t,
+    ">=": lambda x, t: x >= t,
+    ">": lambda x, t: x > t,
+    "==": lambda x, t: x == t,
+    "!=": lambda x, t: x != t,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Delta(Term):
+    """Kronecker delta 1[X op t] — selection conditions / decision-tree nodes.
+
+    ``threshold`` may be a Python scalar (static) or a :class:`Param`
+    (dynamic: resolved from the runtime params dict, traced, recompile-free).
+    """
+
+    attr: str
+    op: str
+    threshold: object
+
+    def __post_init__(self):
+        if self.op not in _OPS:
+            raise ValueError(f"unknown op {self.op!r}")
+
+    def attrs(self) -> FrozenSet[str]:
+        return frozenset([self.attr])
+
+    def evaluate(self, env: Env, params: Params) -> jnp.ndarray:
+        t = _resolve(self.threshold, params)
+        return _OPS[self.op](env[self.attr], t).astype(jnp.float32)
+
+    def key(self) -> Tuple:
+        return ("delta", self.attr, self.op, self.threshold)
+
+
+@dataclasses.dataclass(frozen=True)
+class Lambda(Term):
+    """Generic UDAF over one or more attributes: f(X_a, X_b, ...).
+
+    ``fn`` receives broadcastable arrays in ``attr_order`` and the params
+    dict.  ``tag`` provides structural identity (callables do not hash
+    stably across sessions).
+    """
+
+    attr_order: Tuple[str, ...]
+    fn: Callable
+    tag: str = ""
+
+    def attrs(self) -> FrozenSet[str]:
+        return frozenset(self.attr_order)
+
+    def evaluate(self, env: Env, params: Params) -> jnp.ndarray:
+        return self.fn(*[env[a] for a in self.attr_order], params).astype(jnp.float32)
+
+    def key(self) -> Tuple:
+        return ("lambda", self.attr_order, self.tag or id(self.fn))
+
+
+@dataclasses.dataclass(frozen=True)
+class ProductAgg:
+    """One product Π_k f_k — the unit pushed through the join tree."""
+
+    terms: Tuple[Term, ...] = ()
+
+    def attrs(self) -> FrozenSet[str]:
+        out: FrozenSet[str] = frozenset()
+        for t in self.terms:
+            out |= t.attrs()
+        return out
+
+    def key(self) -> Tuple:
+        return tuple(sorted((t.key() for t in self.terms), key=repr))
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregate:
+    """α = Σ_j products_j  (sum of products)."""
+
+    products: Tuple[ProductAgg, ...]
+
+    def attrs(self) -> FrozenSet[str]:
+        out: FrozenSet[str] = frozenset()
+        for p in self.products:
+            out |= p.attrs()
+        return out
+
+    def key(self) -> Tuple:
+        return tuple(p.key() for p in self.products)
+
+
+def agg(*terms: Term) -> Aggregate:
+    """Single-product aggregate Σ Π terms (the common case: count, sum, covar)."""
+    return Aggregate((ProductAgg(tuple(terms)),))
+
+
+COUNT = agg()  # SUM(1)
+
+
+def sum_of(attr: str) -> Aggregate:
+    return agg(Var(attr))
+
+
+def sum_sq(attr: str) -> Aggregate:
+    return agg(Pow(attr, 2))
+
+
+def sum_prod(a1: str, a2: str) -> Aggregate:
+    if a1 == a2:
+        return sum_sq(a1)
+    return agg(Var(a1), Var(a2))
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """Q(F_1,...,F_f ; α_1,...,α_ℓ) += R_1 ⋈ ... ⋈ R_m   (paper eq. (1)).
+
+    ``group_by`` attributes must be discrete (dictionary-encoded); the output
+    is a dense array over their code domains with a trailing aggregate axis.
+    """
+
+    name: str
+    group_by: Tuple[str, ...]
+    aggregates: Tuple[Aggregate, ...]
+
+    def __post_init__(self):
+        if len(set(self.group_by)) != len(self.group_by):
+            raise ValueError(f"query {self.name!r}: duplicate group-by attrs")
+
+    def all_attrs(self) -> FrozenSet[str]:
+        out = frozenset(self.group_by)
+        for a in self.aggregates:
+            out |= a.attrs()
+        return out
+
+
+def query(name: str, group_by: Sequence[str], aggregates: Sequence[Aggregate]) -> Query:
+    return Query(name, tuple(group_by), tuple(aggregates))

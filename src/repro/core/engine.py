@@ -1,0 +1,136 @@
+"""LMFAO public API: compile a batch of aggregate queries into an executable.
+
+    eng = Engine(schema, sizes=db.sizes())
+    batch = eng.compile(queries)              # layers 1-6 + jit (codegen)
+    results = batch(db)                       # {query name: dense array}
+    results = batch.run_sharded(db, mesh)     # domain-parallel over chips
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import roots as roots_mod
+from repro.core.aggregates import Params, Query
+from repro.core.groups import ViewGroup, group_views, independent_sets
+from repro.core.jointree import JoinTree
+from repro.core.plan import ExecutablePlan, PlanConfig
+from repro.core.pushdown import PushdownResult, push_down
+from repro.core.schema import DatabaseSchema
+
+
+@dataclasses.dataclass
+class BatchStats:
+    """Paper Table 2 analogue."""
+
+    n_app_aggregates: int
+    n_intermediate_cols: int
+    n_views_premerge: int
+    n_views: int
+    n_groups: int
+    group_levels: int
+    roots: Dict[str, str]
+
+    def summary(self) -> str:
+        return (f"A={self.n_app_aggregates} I={self.n_intermediate_cols} "
+                f"V={self.n_views} (pre-merge {self.n_views_premerge}) "
+                f"G={self.n_groups} levels={self.group_levels}")
+
+
+class CompiledBatch:
+    def __init__(self, schema: DatabaseSchema, tree: JoinTree,
+                 result: PushdownResult, groups: List[ViewGroup],
+                 config: PlanConfig, roots: Dict[str, str]):
+        self.schema = schema
+        self.tree = tree
+        self.result = result
+        self.groups = groups
+        self.config = config
+        self.roots = roots
+        self.plan = ExecutablePlan(schema, tree, result, groups, config)
+        self._jitted = {}
+
+    @property
+    def stats(self) -> BatchStats:
+        s = self.result.stats
+        return BatchStats(
+            n_app_aggregates=s.n_app_aggregates,
+            n_intermediate_cols=s.n_intermediate_cols,
+            n_views_premerge=s.n_views_premerge,
+            n_views=s.n_views,
+            n_groups=len(self.groups),
+            group_levels=len(independent_sets(self.groups)),
+            roots=self.roots,
+        )
+
+    # -- single-device ------------------------------------------------------
+
+    def __call__(self, db, params: Optional[Params] = None) -> Dict[str, jnp.ndarray]:
+        params = dict(params or {})
+        n_rows = db.sizes()
+        key = ("local", tuple(sorted(n_rows.items())), tuple(sorted(params)))
+        if key not in self._jitted:
+            run = self.plan.bind(n_rows)
+            self._jitted[key] = jax.jit(lambda cols, p: run(cols, p))
+        cols = {name: dict(rel.columns) for name, rel in db.relations.items()}
+        return self._jitted[key](cols, params)
+
+    def lower(self, db, params: Optional[Params] = None):
+        """Lower without executing (dry-run / HLO inspection)."""
+        params = dict(params or {})
+        run = self.plan.bind(db.sizes())
+        cols = {name: {a: jax.ShapeDtypeStruct(c.shape, c.dtype)
+                       for a, c in rel.columns.items()}
+                for name, rel in db.relations.items()}
+        pspec = {k: jax.ShapeDtypeStruct(jnp.shape(v), jnp.asarray(v).dtype)
+                 for k, v in params.items()}
+        return jax.jit(lambda c, p: run(c, p)).lower(cols, pspec)
+
+    # -- domain-parallel (paper layer 7 on a chip mesh) ----------------------
+
+    def run_sharded(self, db, mesh, axis: str = "data",
+                    shard_rel: Optional[str] = None,
+                    params: Optional[Params] = None) -> Dict[str, jnp.ndarray]:
+        """Partition ``shard_rel`` (default: the largest relation — the
+        paper's choice) across the mesh axis; every device runs the
+        multi-output plans on its partition; partial dense views are psum'd
+        right after their group (LMFAO's merge of per-thread results)."""
+        from repro.core.distributed import sharded_runner
+
+        params = dict(params or {})
+        shard_rel = shard_rel or max(db.sizes(), key=lambda k: db.sizes()[k])
+        fn, cols = sharded_runner(self.plan, db, mesh, axis, shard_rel)
+        return fn(cols, params)
+
+
+class Engine:
+    """Layer driver: join tree -> roots -> pushdown+merge -> groups -> plan."""
+
+    def __init__(self, schema: DatabaseSchema,
+                 edges: Optional[Sequence[Tuple[str, str]]] = None,
+                 sizes: Optional[Dict[str, int]] = None):
+        self.schema = schema
+        self.sizes = dict(sizes or {})
+        if edges is not None:
+            self.tree = JoinTree(schema, edges)
+        else:
+            self.tree = JoinTree.build(schema, self.sizes)
+
+    def compile(self, queries: Sequence[Query], *, multi_root: bool = True,
+                block_size: int = 4096,
+                root_override: Optional[Dict[str, str]] = None) -> CompiledBatch:
+        if root_override is not None:
+            roots = dict(root_override)
+        elif multi_root:
+            roots = roots_mod.find_roots(self.tree, queries, self.sizes)
+        else:
+            roots = roots_mod.single_root(self.tree, queries, self.sizes)
+        result = push_down(self.tree, queries, roots)
+        groups = group_views(result)
+        cfg = PlanConfig(block_size=block_size)
+        return CompiledBatch(self.schema, self.tree, result, groups, cfg, roots)

@@ -1,0 +1,5 @@
+"""Data substrate: columnar relations, synthetic schemas, LM token pipeline."""
+
+from repro.data.relations import Database, Relation, from_numpy, sort_by
+
+__all__ = ["Database", "Relation", "from_numpy", "sort_by"]

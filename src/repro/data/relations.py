@@ -1,0 +1,98 @@
+"""Columnar relation storage.
+
+Relations are dictionaries of same-length 1-D JAX arrays: int32 codes for
+key/categorical attributes, float32 for continuous ones.  This is the
+TPU-native analogue of LMFAO's sorted in-memory arrays of structs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schema as sch
+
+
+@dataclasses.dataclass
+class Relation:
+    name: str
+    columns: Dict[str, jnp.ndarray]
+
+    @property
+    def n_rows(self) -> int:
+        return int(next(iter(self.columns.values())).shape[0])
+
+    def column(self, attr: str) -> jnp.ndarray:
+        return self.columns[attr]
+
+    def validate(self, dbs: sch.DatabaseSchema) -> None:
+        rs = dbs.relation(self.name)
+        if set(self.columns) != set(rs.attrs):
+            raise ValueError(
+                f"relation {self.name!r}: columns {sorted(self.columns)} != schema {sorted(rs.attrs)}")
+        n = self.n_rows
+        for a, col in self.columns.items():
+            if col.shape != (n,):
+                raise ValueError(f"relation {self.name!r}: column {a!r} shape {col.shape} != ({n},)")
+            attr = dbs.attr(a)
+            if attr.is_discrete:
+                if not jnp.issubdtype(col.dtype, jnp.integer):
+                    raise ValueError(f"{self.name}.{a}: discrete column must be integer, got {col.dtype}")
+            else:
+                if not jnp.issubdtype(col.dtype, jnp.floating):
+                    raise ValueError(f"{self.name}.{a}: continuous column must be float, got {col.dtype}")
+
+
+@dataclasses.dataclass
+class Database:
+    schema: sch.DatabaseSchema
+    relations: Dict[str, Relation]
+
+    def validate(self) -> None:
+        for r in self.relations.values():
+            r.validate(self.schema)
+        if set(self.relations) != set(self.schema.relations):
+            raise ValueError("database relations do not match schema relations")
+
+    def relation(self, name: str) -> Relation:
+        return self.relations[name]
+
+    def sizes(self) -> Dict[str, int]:
+        return {n: r.n_rows for n, r in self.relations.items()}
+
+    def total_tuples(self) -> int:
+        return sum(self.sizes().values())
+
+
+def from_numpy(dbs: sch.DatabaseSchema, tables: Mapping[str, Mapping[str, np.ndarray]]) -> Database:
+    """Build a Database from host numpy columns, casting to engine dtypes."""
+    rels = {}
+    for name, cols in tables.items():
+        rs = dbs.relation(name)
+        jcols = {}
+        for a in rs.attrs:
+            col = np.asarray(cols[a])
+            attr = dbs.attr(a)
+            if attr.is_discrete:
+                codes = col.astype(np.int32)
+                if codes.size and (codes.min() < 0 or codes.max() >= attr.domain):
+                    raise ValueError(
+                        f"{name}.{a}: codes outside [0, {attr.domain}) "
+                        f"(min {codes.min()}, max {codes.max()})")
+                jcols[a] = jnp.asarray(codes)
+            else:
+                jcols[a] = jnp.asarray(col.astype(np.float32))
+        rels[name] = Relation(name, jcols)
+    db = Database(dbs, rels)
+    db.validate()
+    return db
+
+
+def sort_by(rel: Relation, attrs: list) -> Relation:
+    """Sort a relation by the given attribute order (LMFAO's trie order)."""
+    keys = [np.asarray(rel.columns[a]) for a in reversed(attrs)]
+    order = np.lexsort(keys)
+    return Relation(rel.name, {a: jnp.asarray(np.asarray(c)[order]) for a, c in rel.columns.items()})

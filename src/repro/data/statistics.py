@@ -1,0 +1,51 @@
+"""Framework integration of the LMFAO engine as the data-layer statistics
+service (DESIGN.md §Arch-applicability).
+
+Training pipelines routinely need sufficient statistics over metadata-joined
+corpora: feature covariances for normalization, pairwise MI for feature
+selection, per-key load counts.  These are exactly LMFAO aggregate batches;
+this module is the thin bridge the LM side of the framework calls.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import COUNT, Engine, agg, query, sum_of, sum_sq
+from repro.data.datasets import Dataset
+
+
+def feature_moments(ds: Dataset, attrs: Optional[Sequence[str]] = None,
+                    block_size: int = 4096) -> Dict[str, Dict[str, float]]:
+    """Mean/var of continuous features over the (non-materialized) join —
+    the normalization statistics a data pipeline applies before training."""
+    attrs = list(attrs if attrs is not None else ds.features_cont)
+    qs = [query("n", [], [COUNT])]
+    for a in attrs:
+        qs.append(query(f"m_{a}", [], [sum_of(a), sum_sq(a)]))
+    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
+    out = eng.compile(qs, block_size=block_size)(ds.db)
+    n = float(np.asarray(out["n"])[0])
+    stats = {}
+    for a in attrs:
+        s, s2 = np.asarray(out[f"m_{a}"], np.float64)
+        mean = s / n
+        stats[a] = {"count": n, "mean": mean, "var": max(s2 / n - mean * mean, 0.0)}
+    return stats
+
+
+def expert_load_aggregate(expert_ids: np.ndarray, n_experts: int) -> np.ndarray:
+    """MoE router load counters expressed as a group-by-expert COUNT through
+    the engine (single-relation degenerate join) — the same statistic
+    moe.router_stats computes inline, here via the in-database path."""
+    from repro.core.schema import schema as mk_schema
+    from repro.data.relations import from_numpy
+
+    S = mk_schema([("expert", "categorical", n_experts)], [("Route", ["expert"])])
+    db = from_numpy(S, {"Route": {"expert": expert_ids.astype(np.int32)}})
+    eng = Engine(S, sizes=db.sizes())
+    out = eng.compile([query("load", ["expert"], [COUNT])])(db)
+    return np.asarray(out["load"])[:, 0]

@@ -1,0 +1,34 @@
+"""Int8 error-feedback gradient compression.
+
+Quantize→dequantize each gradient leaf to int8 with a per-leaf scale before
+the optimizer; the quantization error is carried in a residual buffer and
+added back next step (error feedback keeps SGD/Adam convergence, 1-bit-Adam
+style).  On a real fabric the int8 representation is what crosses pod links
+(4× fewer bytes on the pure-DP ``pod`` axis); here the quantize/dequantize
+pair is the numerics-faithful simulation, applied between gradient
+accumulation and the optimizer.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _q(g, ef):
+    g32 = g.astype(jnp.float32) + ef
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, g32 - deq
+
+
+def compress_decompress(grads: Any, ef: Any) -> Tuple[Any, Any]:
+    """Returns (dequantized grads, new error-feedback residuals)."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef)
+    out = [_q(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]))

@@ -1,0 +1,152 @@
+"""Logical-axis → mesh-axis sharding rules (FSDP + TP + pod-DP).
+
+Parameters declare logical axes (``embed``, ``heads``, ``ffn``, ``vocab``,
+``experts``, ...).  The rules below shard every tensor-parallel dimension over
+``model``, the d_model dimension over ``data`` (ZeRO-3/FSDP: GSPMD inserts
+per-layer all-gathers forward and reduce-scatters backward), and replicate
+across ``pod`` (pure DP between pods; gradients psum over pod+data).
+
+Activations are constrained at block boundaries: batch over (pod, data); KV
+caches shard their *length* over ``model`` (context-parallel decode,
+DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ParamSpec
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "embed": "data",        # FSDP dim on params
+    "heads": "model",
+    "kv": "model",
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",
+    "ssm_in": "model",
+    "layers": None,
+    "cache_seq": "model",   # context-parallel decode
+    "cache_batch": ("pod", "data"),
+    # sequence-parallel activations (Megatron-SP): residual-stream tensors at
+    # block boundaries shard their sequence dim over "model"; attention/mlp
+    # re-gather internally.  Cuts the per-layer remat carry by the TP degree —
+    # required to fit 100-layer train_4k activations (DESIGN.md §6).
+    "seq": "model",
+    "capacity": "data",     # MoE dispatch-bucket capacity dim
+}
+
+SINGLE_POD_RULES: Rules = dict(DEFAULT_RULES, batch=("data",), cache_batch=("data",))
+
+
+def rules_for(mesh: Optional[Mesh], seq_shard: bool = True) -> Rules:
+    if mesh is None:
+        return DEFAULT_RULES
+    base = DEFAULT_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+    if not seq_shard:
+        base = dict(base, seq=None)
+    return base
+
+
+def spec_for(axes: Sequence[Optional[str]], rules: Rules,
+             shape: Optional[Sequence[int]] = None,
+             mesh: Optional[Mesh] = None) -> P:
+    """Logical axes -> PartitionSpec.  With ``shape``+``mesh``, any mapping
+    whose mesh extent does not divide the dimension falls back to replicated
+    (e.g. kv=8 heads on a 16-way model axis, odd vocabs)."""
+    out = []
+    used = set()
+    for i, a in enumerate(axes):
+        mapped = rules.get(a) if a is not None else None
+        if mapped is not None and shape is not None and mesh is not None:
+            n = _axis_size(mesh, mapped)
+            if n > 1 and (shape[i] % n != 0):
+                mapped = None
+        # a mesh axis may appear at most once per spec: first dim wins
+        # (e.g. caches prefer cache_seq over kv on the model axis —
+        # context-parallel decode)
+        if mapped is not None:
+            names = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+            if any(m in used for m in names):
+                mapped = None
+            else:
+                used.update(names)
+        out.append(mapped)
+    return P(*out)
+
+
+def param_pspecs(specs_tree, rules: Rules, mesh: Optional[Mesh] = None):
+    return jax.tree.map(lambda s: spec_for(s.axes, rules, s.shape, mesh),
+                        specs_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_shardings(specs_tree, mesh: Mesh, rules: Optional[Rules] = None):
+    rules = rules or rules_for(mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_for(s.axes, rules, s.shape, mesh)),
+        specs_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# -- activation sharding constraints (no-op outside a mesh context) ---------
+
+_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh], rules: Optional[Rules] = None):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, rules or rules_for(mesh)) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = getattr(_STATE, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def _axis_size(mesh: Mesh, mapped) -> int:
+    if mapped is None:
+        return 1
+    if isinstance(mapped, str):
+        return mesh.shape[mapped]
+    out = 1
+    for m in mapped:
+        out *= mesh.shape[m]
+    return out
+
+
+def constrain(x, *axes: Optional[str]):
+    """Apply a sharding constraint by logical axis names (no-op without mesh).
+    Axes whose mesh extent does not divide the dimension are dropped to
+    replicated rather than padded."""
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    eff = []
+    used = set()
+    for i, a in enumerate(axes):
+        mapped = rules.get(a) if a is not None else None
+        n = _axis_size(mesh, mapped)
+        if mapped is None or n <= 1 or x.shape[i] % n != 0 or x.shape[i] < n:
+            eff.append(None)
+            continue
+        names = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        if any(m in used for m in names):
+            eff.append(None)
+        else:
+            used.update(names)
+            eff.append(mapped)
+    spec = P(*eff)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

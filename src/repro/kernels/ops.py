@@ -1,0 +1,107 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to MXU-aligned tile multiples, dtype management, and the
+``interpret`` switch (True on CPU — the kernel body executes in Python for
+validation; False on real TPU).  Every wrapper has a matching oracle in
+``ref.py``; tests sweep shapes/dtypes asserting allclose.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.covar_xtx import covar_xtx_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.seg_aggregate import seg_aggregate_pallas
+from repro.kernels.tree_hist import tree_hist_pallas
+
+
+def _pad_rows(x: jnp.ndarray, m: int) -> jnp.ndarray:
+    n = x.shape[0]
+    target = ((n + m - 1) // m) * m
+    if target == n:
+        return x
+    pad = [(0, target - n)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+def _pad_dim(x: jnp.ndarray, axis: int, m: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    target = ((n + m - 1) // m) * m
+    if target == n:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - n)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret", "feature_align"))
+def covar_xtx(x: jnp.ndarray, w: Optional[jnp.ndarray] = None, *,
+              block_rows: int = 512, interpret: bool = False,
+              feature_align: int = 8) -> jnp.ndarray:
+    """C = Xᵀ diag(w) X with row/feature padding; returns (F, F) unpadded."""
+    n, f = x.shape
+    if w is None:
+        w = jnp.ones((n,), jnp.float32)
+    x = _pad_dim(x.astype(jnp.float32), 1, feature_align)
+    xp = _pad_rows(x, block_rows)
+    wp = _pad_rows(w.astype(jnp.float32), block_rows)  # pad weight = 0
+    c = covar_xtx_pallas(xp, wp, block_rows=block_rows, interpret=interpret)
+    return c[:f, :f]
+
+
+@functools.partial(jax.jit, static_argnames=("n_segments", "block_rows", "interpret"))
+def seg_aggregate(seg: jnp.ndarray, payload: jnp.ndarray, n_segments: int, *,
+                  block_rows: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """Segment-sum payload rows into n_segments (padding rows -> id n_segments,
+    accumulated into a sacrificial extra row then dropped)."""
+    n, a = payload.shape
+    segp = _pad_rows(seg.astype(jnp.int32), block_rows)
+    pad = segp.shape[0] - n
+    if pad:
+        segp = segp.at[n:].set(n_segments)
+    payp = _pad_rows(payload.astype(jnp.float32), block_rows)
+    out = seg_aggregate_pallas(segp, payp, n_segments + 1,
+                               block_rows=block_rows, interpret=interpret)
+    return out[:n_segments]
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "block_rows", "interpret"))
+def tree_hist(codes: jnp.ndarray, y: jnp.ndarray, cond: jnp.ndarray,
+              n_buckets: int, *, block_rows: int = 512,
+              interpret: bool = False) -> jnp.ndarray:
+    """Per-bucket [count, Σy, Σy²] under the node mask."""
+    n = codes.shape[0]
+    codesp = _pad_rows(codes.astype(jnp.int32), block_rows)
+    pad = codesp.shape[0] - n
+    if pad:
+        codesp = codesp.at[n:].set(n_buckets)  # out-of-range -> sacrificial row
+    yp = _pad_rows(y.astype(jnp.float32), block_rows)
+    condp = _pad_rows(cond.astype(jnp.float32), block_rows)
+    out = tree_hist_pallas(codesp, yp, condp, n_buckets + 1,
+                           block_rows=block_rows, interpret=interpret)
+    return out[:n_buckets]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Blockwise attention; pads sequence dims to tile multiples.  Padded
+    query rows produce garbage sliced away below; padded key columns are
+    excluded inside the kernel via the ``kv_len`` mask."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    qp = _pad_dim(q, 2, block_q)
+    kp = _pad_dim(k, 2, block_k)
+    vp = _pad_dim(v, 2, block_k)
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 kv_len=sk, block_q=block_q, block_k=block_k,
+                                 interpret=interpret)
+    return out[:, :, :sq, :]

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def covar_xtx_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("nf,n,ng->fg", x.astype(jnp.float32), w.astype(jnp.float32),
+                      x.astype(jnp.float32))
+
+
+def seg_aggregate_ref(seg: jnp.ndarray, payload: jnp.ndarray, n_segments: int) -> jnp.ndarray:
+    # out-of-range segment ids must contribute nowhere (padding convention)
+    ok = (seg >= 0) & (seg < n_segments)
+    pay = payload * ok[:, None].astype(payload.dtype)
+    sid = jnp.where(ok, seg, 0)
+    return jax.ops.segment_sum(pay, sid, num_segments=n_segments)
+
+
+def tree_hist_ref(codes: jnp.ndarray, y: jnp.ndarray, cond: jnp.ndarray,
+                  n_buckets: int) -> jnp.ndarray:
+    payload = jnp.stack([cond, cond * y, cond * y * y], axis=1)
+    return seg_aggregate_ref(codes, payload, n_buckets)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """Dense reference attention with GQA, causal and sliding-window masks."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = h // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kr).astype(jnp.float32) / (d ** 0.5)
+    rows = jnp.arange(sq)[:, None]
+    cols = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask = mask & (cols <= rows)
+    if window > 0:
+        mask = mask & (cols > rows - window)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr).astype(q.dtype)

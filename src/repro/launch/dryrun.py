@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax -------------------------------------
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) cell
+on the production meshes, record memory/cost analysis and the collective
+schedule for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out reports/dryrun
+
+Each cell: jit(step).lower(...).compile() on the 16×16 single-pod mesh and
+the (2,16,16) multi-pod mesh.  Failures (sharding mismatch, OOM at compile,
+unsupported collective) are bugs in the system, per the brief.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.shapes import SHAPES, InputShape, applicable
+from repro.distributed.sharding import param_pspecs, rules_for, spec_for
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.layers import abstract_params
+from repro.serve.engine import make_serve_step
+from repro.train.step import (TrainConfig, abstract_state, batch_pspecs,
+                              make_prefill_step, make_train_step, state_pspecs)
+
+# per-(family) grad-accum so microbatch activations fit HBM (DESIGN.md §6)
+GRAD_ACCUM = {"ssm": 4, "hybrid": 4, "moe": 2, "vlm": 2, "dense": 2, "audio": 1}
+
+
+def train_cfg_for(cfg: ModelConfig, shape: InputShape) -> TrainConfig:
+    ga = GRAD_ACCUM.get(cfg.family, 1)
+    # keep microbatch >= 1 per data shard
+    while shape.global_batch // ga < 32 and ga > 1:
+        ga //= 2
+    return TrainConfig(ce_chunk=256, grad_accum=ga, attn_impl="chunked")
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    rules = rules_for(mesh)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["vision"] = jax.ShapeDtypeStruct((b, cfg.vision_tokens, cfg.d_model),
+                                                   jnp.float32)
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_frames, cfg.d_model),
+                                                   jnp.float32)
+        return batch
+    # decode: one new token against a cache of seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+           "pos": jax.ShapeDtypeStruct((), jnp.int32),
+           "cache": jax.tree.map(
+               lambda sp: jax.ShapeDtypeStruct(sp.shape, cfg.jdtype),
+               M.cache_specs(cfg, b, s),
+               is_leaf=lambda x: hasattr(x, "axes"))}
+    if cfg.family == "vlm":
+        out["context"] = jax.ShapeDtypeStruct((b, cfg.vision_tokens, cfg.d_model),
+                                              jnp.float32)
+    if cfg.family == "audio":
+        out["context"] = jax.ShapeDtypeStruct((b, cfg.encoder_frames, cfg.d_model),
+                                              jnp.float32)
+    return out
+
+
+def collective_bytes_from_hlo(hlo: str) -> Dict[str, float]:
+    """Per-device bytes crossing links, by collective type, from optimized HLO.
+
+    Model (ring algorithms, (n-1)/n ≈ 1): all-reduce 2×operand; all-gather
+    result; reduce-scatter operand; all-to-all operand; collective-permute
+    operand."""
+    dt_bytes = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f8e4m3": 1,
+                "f8e5m2": 1, "s16": 2, "u16": 2}
+
+    def shape_bytes(stext: str) -> float:
+        total = 0.0
+        for m in re.finditer(r"(\w+)\[([\d,]*)\]", stext):
+            dt, dims = m.group(1), m.group(2)
+            if dt not in dt_bytes:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            total += n * dt_bytes[dt]
+        return total
+
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    pat = re.compile(
+        r"=\s*((?:\w+\[[\d,]*\]|\(.*?\)))\s+"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start|-done)?\(([^)]*)\)")
+    seen_done = set()
+    for line in hlo.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        result_s, kind, operands = m.group(1), m.group(2), m.group(3)
+        if "-done(" in line:   # avoid double counting start/done pairs
+            continue
+        rb = shape_bytes(result_s)
+        ob = shape_bytes(operands)
+        if kind == "all-reduce":
+            out[kind] += 2 * (ob or rb)
+        elif kind == "all-gather":
+            out[kind] += rb or ob
+        else:
+            out[kind] += ob or rb
+    out["total"] = sum(out.values())
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               compile_: bool = True) -> Dict[str, Any]:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "why": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(mesh)
+    tcfg = train_cfg_for(cfg, shape)
+    t0 = time.time()
+
+    if shape.kind == "train" and shape.name not in ("prefill_32k",):
+        step = make_train_step(cfg, tcfg, mesh)
+        state_sds = abstract_state(cfg, tcfg)
+        sspec = state_pspecs(cfg, tcfg, mesh)
+        bspec = batch_pspecs(cfg, mesh)
+        batch_sds = input_specs(cfg, shape, mesh)
+        jitted = jax.jit(step,
+                         in_shardings=(jax.tree.map(lambda s: NamedSharding(mesh, s), sspec),
+                                       jax.tree.map(lambda s: NamedSharding(mesh, s), bspec)),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(state_sds, batch_sds)
+    elif shape.name == "prefill_32k":
+        step = make_prefill_step(cfg, tcfg, mesh)
+        pspec = param_pspecs(M.model_specs(cfg), rules, mesh)
+        bspec = batch_pspecs(cfg, mesh)
+        params_sds = abstract_params(M.model_specs(cfg), cfg.jdtype)
+        batch_sds = input_specs(cfg, shape, mesh)
+        jitted = jax.jit(step,
+                         in_shardings=(jax.tree.map(lambda s: NamedSharding(mesh, s), pspec),
+                                       jax.tree.map(lambda s: NamedSharding(mesh, s), bspec)))
+        lowered = jitted.lower(params_sds, batch_sds)
+    else:  # decode
+        step = make_serve_step(cfg, mesh)
+        pspec = param_pspecs(M.model_specs(cfg), rules, mesh)
+        cspec = param_pspecs(M.cache_specs(cfg, shape.global_batch, shape.seq_len),
+                             rules, mesh)
+        params_sds = abstract_params(M.model_specs(cfg), cfg.jdtype)
+        ins = input_specs(cfg, shape, mesh)
+        tok_spec = spec_for(("batch", None), rules, ins["tokens"].shape, mesh)
+        ctx = ins.get("context")
+        ctx_spec = (spec_for(("batch", None, None), rules, ctx.shape, mesh)
+                    if ctx is not None else None)
+        shardify = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+        in_sh = (shardify(pspec), shardify(cspec), NamedSharding(mesh, tok_spec),
+                 NamedSharding(mesh, P()))
+        args = (params_sds, ins["cache"], ins["tokens"], ins["pos"])
+        if ctx is not None:
+            in_sh = in_sh + (NamedSharding(mesh, ctx_spec),)
+            args = args + (ctx,)
+        jitted = jax.jit(step, in_shardings=in_sh, donate_argnums=(1,))
+        lowered = jitted.lower(*args)
+
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "status": "lowered", "lower_s": round(time.time() - t0, 2),
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "kind": shape.kind, "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+    }
+    if not compile_:
+        return rec
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+    rec["status"] = "compiled"
+
+    mem = compiled.memory_analysis()
+    try:
+        rec["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception:
+        rec["memory"] = str(mem)
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    rec["cost"] = {k: float(v) for k, v in dict(cost or {}).items()
+                   if isinstance(v, (int, float)) and (
+                       "flops" in k or "bytes" in k or "utilization" not in k)}
+    hlo = compiled.as_text()
+    rec["collectives"] = collective_bytes_from_hlo(hlo)
+    rec["hlo_lines"] = hlo.count("\n")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--no-compile", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = configs.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                try:
+                    rec = lower_cell(arch, shape, mp, compile_=not args.no_compile)
+                except Exception as e:  # a failure here is a bug in the system
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "FAILED", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                    failures += 1
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "compiled":
+                    extra = (f" flops/dev={rec['cost'].get('flops', 0):.3e}"
+                             f" coll={rec['collectives']['total']:.3e}B"
+                             f" compile={rec['compile_s']}s")
+                print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+    if failures:
+        print(f"[dryrun] {failures} FAILURES", flush=True)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

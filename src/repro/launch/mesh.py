@@ -1,0 +1,17 @@
+"""Production mesh construction (a function — importing this module never
+touches jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU demos)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,165 @@
+"""Beyond-paper optimized covar path: factorized gather + blocked XᵀX.
+
+For FK-join (star/snowflake) schemas every fact row matches exactly one row
+per dimension, so the joined row count equals the fact row count and each
+joined feature vector is a *gather*, never an expansion.  The whole covar
+batch (hundreds of engine queries) then collapses into one blocked
+``C += EᵀE`` over the gathered one-hot-extended feature matrix — the MXU-
+native form (DESIGN.md §2); the `kernels/covar_xtx` Pallas kernel is its TPU
+implementation and the jnp path below its portable equivalent.
+
+The join is still never materialized as a table: per block we gather O(B·p)
+values from the columnar store.  Many-to-many schemas (Yelp's
+Category/Attribute) violate the one-match precondition — ``supports_fused``
+detects this and callers fall back to the general engine path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.datasets import Dataset
+from repro.ml.covar import CovarLayout, covar_queries
+
+
+def supports_fused(ds: Dataset) -> bool:
+    """True when every non-fact relation is keyed uniquely by its join key(s)
+    reachable FK-style from the fact table (each fact row joins exactly one
+    row per dimension)."""
+    from repro.core.jointree import JoinTree
+    tree = JoinTree(ds.schema, ds.edges)
+    for rel in tree.nodes:
+        if rel == ds.fact:
+            continue
+        parent = tree.parent(rel, ds.fact)
+        keys = sorted(tree.join_attrs(rel, parent))
+        cols = [np.asarray(ds.tables[rel][k]) for k in keys]
+        n = len(cols[0])
+        flat = cols[0].astype(np.int64)
+        for c in cols[1:]:
+            flat = flat * (c.max() + 1) + c
+        if len(np.unique(flat)) != n:
+            return False
+    return True
+
+
+def _dim_maps(ds: Dataset) -> Dict[str, Dict]:
+    """Per non-fact relation: key attrs + dense key->row lookup tables."""
+    from repro.core.jointree import JoinTree
+    tree = JoinTree(ds.schema, ds.edges)
+    maps = {}
+    for rel in tree.nodes:
+        if rel == ds.fact:
+            continue
+        parent = tree.parent(rel, ds.fact)
+        keys = sorted(tree.join_attrs(rel, parent))
+        doms = [ds.schema.domain(k) for k in keys]
+        size = int(np.prod(doms))
+        lut = np.zeros(size, dtype=np.int32)
+        cols = [np.asarray(ds.tables[rel][k]) for k in keys]
+        flat = cols[0].astype(np.int64)
+        for c, d in zip(cols[1:], doms[1:]):
+            flat = flat * d + c
+        lut[flat] = np.arange(len(flat))
+        maps[rel] = {"keys": keys, "doms": doms, "lut": jnp.asarray(lut),
+                     "parent": parent}
+    return maps
+
+
+def make_fused_covar(ds: Dataset, layout: Optional[CovarLayout] = None,
+                     block_size: int = 8192, use_pallas: bool = False):
+    """Build a reusable jitted callable computing the (p, p) covar via
+    blocked gathered XᵀX.  Returns (fn, layout) with fn() -> (p, p) array."""
+    if layout is None:
+        _, layout = covar_queries(ds)
+    assert supports_fused(ds), "many-to-many join: use the engine path"
+    maps = _dim_maps(ds)
+    from repro.core.jointree import JoinTree
+    tree = JoinTree(ds.schema, ds.edges)
+
+    # resolve, for every feature attr, its relation + row-index expression
+    fact_cols = {a: jnp.asarray(np.asarray(c)) for a, c in ds.tables[ds.fact].items()}
+    rel_of = {}
+    for a in list(layout.cont) + list(layout.cat) + [layout.label]:
+        home = min(ds.schema.relations_with(a),
+                   key=lambda r: 0 if r == ds.fact else 1)
+        rel_of[a] = home
+
+    rel_cols = {r: {a: jnp.asarray(np.asarray(c)) for a, c in t.items()}
+                for r, t in ds.tables.items()}
+    n = ds.db.relation(ds.fact).n_rows
+    p = layout.p
+
+    # chain of gathers fact -> dim (snowflake: dim of dim via parent rows)
+    def row_index(rel, fact_block):
+        m = maps[rel]
+        if m["parent"] == ds.fact:
+            key_cols = {k: fact_block[k] for k in m["keys"]}
+        else:
+            pidx = row_index(m["parent"], fact_block)
+            key_cols = {k: rel_cols[m["parent"]][k][pidx] for k in m["keys"]}
+        flat = key_cols[m["keys"][0]].astype(jnp.int32)
+        for k, d in zip(m["keys"][1:], m["doms"][1:]):
+            flat = flat * d + key_cols[k]
+        return m["lut"][flat]
+
+    def block_features(fact_block, valid):
+        cols = [valid]  # intercept (0 on padding)
+        idx_cache = {}
+        def col_of(a):
+            r = rel_of[a]
+            if r == ds.fact:
+                return fact_block[a]
+            if r not in idx_cache:
+                idx_cache[r] = row_index(r, fact_block)
+            return rel_cols[r][a][idx_cache[r]]
+        for a in layout.cont:
+            cols.append(col_of(a).astype(jnp.float32) * valid)
+        feats = [jnp.stack(cols, axis=1)]
+        for a in layout.cat:
+            oh = jax.nn.one_hot(col_of(a), layout.cat_domains[a],
+                                dtype=jnp.float32) * valid[:, None]
+            feats.append(oh)
+        y = col_of(layout.label).astype(jnp.float32) * valid
+        feats.append(y[:, None])
+        return jnp.concatenate(feats, axis=1)      # (B, p)
+
+    n_pad = ((n + block_size - 1) // block_size) * block_size
+    fact_padded = {a: jnp.pad(c, (0, n_pad - n)) for a, c in fact_cols.items()}
+    blocked = {a: c.reshape(-1, block_size) for a, c in fact_padded.items()}
+    n_blocks = n_pad // block_size
+
+    @jax.jit
+    def run(blocked_cols):
+        def body(acc, xs):
+            blk, bi = xs
+            ridx = bi * block_size + jnp.arange(block_size)
+            valid = (ridx < n).astype(jnp.float32)
+            e = block_features(blk, valid)
+            if use_pallas:
+                from repro.kernels.covar_xtx import covar_xtx_pallas
+                c = covar_xtx_pallas(e, valid, block_rows=block_size,
+                                     interpret=True)
+            else:
+                c = jnp.einsum("bp,bq->pq", e, e)
+            return acc + c, None
+        acc0 = jnp.zeros((p, p), jnp.float32)
+        acc, _ = jax.lax.scan(body, acc0,
+                              (blocked_cols, jnp.arange(n_blocks)))
+        return acc
+
+    return (lambda: run(blocked)), layout
+
+
+def compute_covar_fused(ds: Dataset, layout: Optional[CovarLayout] = None,
+                        block_size: int = 8192,
+                        use_pallas: bool = False) -> Tuple[np.ndarray, float, CovarLayout]:
+    """One-shot convenience wrapper around :func:`make_fused_covar`."""
+    fn, layout = make_fused_covar(ds, layout, block_size, use_pallas)
+    n = ds.db.relation(ds.fact).n_rows
+    return np.asarray(fn(), dtype=np.float64), float(n), layout

@@ -1,0 +1,56 @@
+"""Data cubes (paper §2, eq. (6)): 2^k group-by aggregates, v measures each.
+
+Two evaluation paths:
+  * ``cube_via_engine`` — all 2^k subset queries as one LMFAO batch (the
+    paper's path; view merging shares the per-edge count views across cells);
+  * ``cube_rollup`` — beyond-paper: compute only the finest cell with the
+    engine, then roll coarser cells up the lattice by marginalizing axes
+    (classic Harinarayan-style reuse, exact for SUM measures).
+Tests assert both paths agree.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import Engine, query, sum_of
+from repro.data.datasets import Dataset
+
+
+def cube_name(subset: Sequence[str]) -> str:
+    return "cube_" + ("_".join(subset) if subset else "ALL")
+
+
+def cube_queries(dims: Sequence[str], measures: Sequence[str]):
+    qs = []
+    for r in range(len(dims) + 1):
+        for subset in itertools.combinations(dims, r):
+            qs.append(query(cube_name(subset), list(subset),
+                            [sum_of(m) for m in measures]))
+    return qs
+
+
+def cube_via_engine(ds: Dataset, dims: Sequence[str], measures: Sequence[str],
+                    multi_root: bool = True, block_size: int = 4096,
+                    engine: Optional[Engine] = None) -> Dict[str, np.ndarray]:
+    qs = cube_queries(dims, measures)
+    eng = engine or Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
+    batch = eng.compile(qs, multi_root=multi_root, block_size=block_size)
+    return {k: np.asarray(v, np.float64) for k, v in batch(ds.db).items()}
+
+
+def cube_rollup(ds: Dataset, dims: Sequence[str], measures: Sequence[str],
+                block_size: int = 4096) -> Dict[str, np.ndarray]:
+    finest = cube_via_engine(ds, dims, measures, block_size=block_size,
+                             multi_root=True)[cube_name(dims)]
+    out: Dict[str, np.ndarray] = {}
+    for r in range(len(dims) + 1):
+        for subset in itertools.combinations(dims, r):
+            axes = tuple(i for i, d in enumerate(dims) if d not in subset)
+            arr = finest.sum(axis=axes) if axes else finest
+            # finest axes order == dims order; subset keeps relative order
+            out[cube_name(subset)] = arr
+    return out

@@ -1,0 +1,241 @@
+"""Classification & regression trees (CART) over aggregate batches (paper §2).
+
+Each CART node needs, per candidate split, COUNT / SUM(y) / SUM(y²) (variance,
+regression) or per-class counts (Gini, classification) over the *fragment* of
+the join satisfying the node's ancestor conditions — queries (8)-(10) of the
+paper, "extended with the group-by attribute X" so that ONE query per feature
+covers every threshold at once.
+
+Dynamic functions, recompile-free: the node's conjunction of ancestor
+conditions is Π_g mask_g[X_g], one mask-lookup UDAF per split attribute whose
+(0/1) mask arrays are **runtime parameters**.  LMFAO recompiles + dlopens
+per-node C++ for these (paper §1.2); under JAX tracing the masks are traced
+arguments, so the whole tree is built from a single compiled batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import COUNT, Delta, Engine, Lambda, Pow, Var, agg, query
+from repro.data.datasets import Dataset
+
+
+def _mask_term(attr: str) -> Lambda:
+    def fn(x, params, _attr=attr):
+        return params[f"mask_{_attr}"][x]
+    return Lambda((attr,), fn, tag=f"mask_{attr}")
+
+
+@dataclasses.dataclass
+class SplitFeature:
+    attr: str          # categorical attr grouped by (bucket code for continuous)
+    kind: str          # 'ordered' (threshold splits) | 'categorical' (one-vs-rest)
+    domain: int
+
+
+@dataclasses.dataclass
+class TreeNode:
+    node_id: int
+    depth: int
+    masks: Dict[str, np.ndarray]
+    n: float = 0.0
+    prediction: float = 0.0
+    feature: Optional[str] = None
+    kind: str = ""
+    threshold: int = -1        # bucket threshold (ordered) or category (cat)
+    left: int = -1
+    right: int = -1
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.left < 0
+
+
+class DecisionTree:
+    """CART via one LMFAO batch; task ∈ {'regression', 'classification'}."""
+
+    def __init__(self, ds: Dataset, task: str = "regression",
+                 label: Optional[str] = None,
+                 split_attrs: Optional[Sequence[str]] = None,
+                 max_depth: int = 4, min_instances: int = 1000,
+                 max_nodes: int = 31, block_size: int = 4096,
+                 multi_root: bool = True):
+        self.ds = ds
+        self.task = task
+        self.label = label or (ds.label if task == "regression" else None)
+        if self.label is None:
+            raise ValueError("classification needs an explicit categorical label")
+        self.max_depth = max_depth
+        self.min_instances = min_instances
+        self.max_nodes = max_nodes
+
+        if split_attrs is None:
+            split_attrs = ([ds.bucket_attr(c) for c in ds.features_cont
+                            if ds.bucket_attr(c) in ds.schema.attributes] +
+                           [c for c in ds.features_cat if c != self.label])
+        self.features: List[SplitFeature] = []
+        for a in split_attrs:
+            kind = "ordered" if a.endswith("__b") else "categorical"
+            self.features.append(SplitFeature(a, kind, ds.schema.domain(a)))
+
+        if task == "classification":
+            self.n_classes = ds.schema.domain(self.label)
+        else:
+            self.n_classes = 0
+
+        self._build_batch(block_size, multi_root)
+        self.nodes: List[TreeNode] = []
+
+    # -- the aggregate batch (compiled once for the whole tree) --------------
+
+    def _build_batch(self, block_size: int, multi_root: bool) -> None:
+        cond = [_mask_term(f.attr) for f in self.features]
+        queries = []
+        for f in self.features:
+            if self.task == "regression":
+                aggs = [agg(*cond), agg(Var(self.label), *cond),
+                        agg(Pow(self.label, 2), *cond)]
+            else:
+                aggs = [agg(*cond)] + [agg(Delta(self.label, "==", c), *cond)
+                                       for c in range(self.n_classes)]
+            queries.append(query(f"split_{f.attr}", [f.attr], aggs))
+        eng = Engine(self.ds.schema, edges=self.ds.edges, sizes=self.ds.db.sizes())
+        self.batch = eng.compile(queries, multi_root=multi_root, block_size=block_size)
+        self.n_aggregates = sum(len(q.aggregates) * self.ds.schema.domain(q.group_by[0])
+                                for q in queries)
+
+    def _node_params(self, masks: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        return {f"mask_{a}": m.astype(np.float32) for a, m in masks.items()}
+
+    # -- cost functions -------------------------------------------------------
+
+    def _cost(self, stats: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """stats (..., n_aggs) -> (count, cost, prediction)."""
+        n = stats[..., 0]
+        safe_n = np.maximum(n, 1e-9)
+        if self.task == "regression":
+            s, s2 = stats[..., 1], stats[..., 2]
+            cost = s2 - s * s / safe_n           # sum of squared errors
+            pred = s / safe_n
+        else:
+            probs = stats[..., 1:] / safe_n[..., None]
+            gini = 1.0 - (probs ** 2).sum(-1)
+            cost = n * gini
+            pred = stats[..., 1:].argmax(-1).astype(np.float64)
+        return n, cost, pred
+
+    # -- fitting ---------------------------------------------------------------
+
+    def fit(self) -> "DecisionTree":
+        root_masks = {f.attr: np.ones(f.domain, dtype=np.float32) for f in self.features}
+        self.nodes = [TreeNode(0, 0, root_masks)]
+        frontier = [0]
+        while frontier and len(self.nodes) < self.max_nodes:
+            nid = frontier.pop(0)
+            node = self.nodes[nid]
+            outputs = self.batch(self.ds.db, params=self._node_params(node.masks))
+            best = self._best_split(outputs)
+            # record node stats from any feature's totals
+            first = np.asarray(outputs[f"split_{self.features[0].attr}"], np.float64)
+            tot = first.sum(axis=0)
+            n, cost, pred = self._cost(tot)
+            node.n, node.prediction = float(n), float(pred)
+            if best is None or node.depth >= self.max_depth:
+                continue
+            feat, kind, thr, gain = best
+            if gain <= 1e-9:
+                continue
+            lm, rm = self._child_masks(node.masks, feat, kind, thr)
+            node.feature, node.kind, node.threshold = feat, kind, thr
+            node.left = len(self.nodes)
+            self.nodes.append(TreeNode(node.left, node.depth + 1, lm))
+            node.right = len(self.nodes)
+            self.nodes.append(TreeNode(node.right, node.depth + 1, rm))
+            frontier += [node.left, node.right]
+        # fill leaf stats for nodes never expanded
+        for node in self.nodes:
+            if node.n == 0.0:
+                outputs = self.batch(self.ds.db, params=self._node_params(node.masks))
+                first = np.asarray(outputs[f"split_{self.features[0].attr}"], np.float64)
+                n, _, pred = self._cost(first.sum(axis=0))
+                node.n, node.prediction = float(n), float(pred)
+        return self
+
+    def _best_split(self, outputs) -> Optional[Tuple[str, str, int, float]]:
+        best = None
+        for f in self.features:
+            stats = np.asarray(outputs[f"split_{f.attr}"], np.float64)  # (D, n_aggs)
+            tot = stats.sum(axis=0)
+            n_tot, cost_tot, _ = self._cost(tot)
+            if n_tot < 2 * self.min_instances:
+                continue
+            if f.kind == "ordered":
+                left = np.cumsum(stats, axis=0)[:-1]      # thresholds 0..D-2
+            else:
+                left = stats                               # one-vs-rest
+            right = tot[None, :] - left
+            nl, cl, _ = self._cost(left)
+            nr, cr, _ = self._cost(right)
+            ok = (nl >= self.min_instances) & (nr >= self.min_instances)
+            gain = np.where(ok, cost_tot - (cl + cr), -np.inf)
+            if gain.size and np.max(gain) > -np.inf:
+                t = int(np.argmax(gain))
+                cand = (f.attr, f.kind, t, float(gain[t]))
+                if best is None or cand[3] > best[3]:
+                    best = cand
+        return best
+
+    def _child_masks(self, masks, feat: str, kind: str, thr: int):
+        lm = {a: m.copy() for a, m in masks.items()}
+        rm = {a: m.copy() for a, m in masks.items()}
+        d = lm[feat].shape[0]
+        if kind == "ordered":
+            ind = (np.arange(d) <= thr).astype(np.float32)
+        else:
+            ind = (np.arange(d) == thr).astype(np.float32)
+        lm[feat] = lm[feat] * ind
+        rm[feat] = rm[feat] * (1.0 - ind)
+        return lm, rm
+
+    # -- inference over materialized rows (test-time only) ---------------------
+
+    def predict(self, rows: Dict[str, np.ndarray]) -> np.ndarray:
+        n = len(next(iter(rows.values())))
+        out = np.zeros(n, dtype=np.float64)
+        idx = np.zeros(n, dtype=np.int64)
+        active = np.ones(n, dtype=bool)
+        # iterative tree walk (vectorized per node)
+        for _ in range(self.max_depth + 1):
+            moved = False
+            for nid, node in enumerate(self.nodes):
+                sel = active & (idx == nid)
+                if not sel.any():
+                    continue
+                if node.is_leaf:
+                    out[sel] = node.prediction
+                    active[sel] = False
+                else:
+                    moved = True
+                    codes = np.asarray(rows[node.feature])[sel]
+                    if node.kind == "ordered":
+                        goleft = codes <= node.threshold
+                    else:
+                        goleft = codes == node.threshold
+                    tmp = idx[sel]
+                    tmp[goleft] = node.left
+                    tmp[~goleft] = node.right
+                    idx[sel] = tmp
+            if not moved:
+                break
+        for nid, node in enumerate(self.nodes):  # flush remaining
+            sel = active & (idx == nid)
+            if sel.any():
+                out[sel] = node.prediction
+        return out
+
+    def n_split_nodes(self) -> int:
+        return sum(1 for n in self.nodes if not n.is_leaf)

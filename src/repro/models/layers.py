@@ -1,0 +1,287 @@
+"""Core model layers as pure functions over parameter pytrees.
+
+Parameters are declared as :class:`ParamSpec` trees with *logical axis names*
+(``embed``, ``heads``, ``ffn``, ``vocab``, ``experts``, ...).  The distributed
+layer maps logical axes to mesh axes (FSDP over ``data``, tensor-parallel over
+``model``, pure DP over ``pod``) — see ``repro/distributed/sharding.py``.
+
+Attention offers three implementations:
+  * ``dense``   — full softmax (small shapes / smoke tests)
+  * ``chunked`` — lax.scan over query chunks with a rematerialized chunk body;
+                  O(S·chunk) live memory, the XLA analogue of the Pallas flash
+                  kernel, used by dry-run prefill at 32k
+  * ``pallas``  — the kernels/flash_attention.py blockwise kernel (TPU target;
+                  interpret=True for CPU validation)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis names (len == ndim)
+    init: str = "normal"                 # normal | zeros | ones
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def p_(shape, axes, init="normal", scale=0.02) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), init, scale)
+
+
+def init_params(specs, key, dtype) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dtype))
+        else:
+            out.append((jax.random.normal(k, spec.shape) * spec.scale).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs, dtype) -> Any:
+    """ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# --------------------------------------------------------------------------
+# Normalization / embeddings / rope
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, n, d) rotary over the last dim; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (np.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention cores
+# --------------------------------------------------------------------------
+
+
+def _dense_attention(q, k, v, *, causal: bool, window: int,
+                     q_offset: int = 0, kv_len: Optional[jnp.ndarray] = None):
+    """q: (B,S,H,hd), k/v: (B,T,Kv,hd). Returns (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    rows = q_offset + jnp.arange(s)[:, None]
+    cols = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), dtype=bool)
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= cols > rows - window
+    if kv_len is not None:
+        mask &= cols < kv_len
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return o.reshape(b, s, h, v.shape[-1])   # v head dim may differ (MLA)
+
+
+def _chunked_attention(q, k, v, *, causal: bool, window: int, chunk: int = 512,
+                       unroll: bool = False):
+    """Memory-efficient attention: scan over query chunks; the chunk body is
+    rematerialized so the backward pass never holds all (S/chunk) score
+    blocks at once.  ``unroll`` is the roofline-measurement mode (XLA counts
+    loop bodies once)."""
+    b, s, h, hd = q.shape
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = q.shape[1] // chunk
+    qc = q.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def body(qi, i):
+        return _dense_attention(qi, k, v, causal=causal, window=window,
+                                q_offset=i * chunk,
+                                kv_len=jnp.asarray(s))
+
+    def step(_, xs):
+        qi, i = xs
+        return None, body(qi, i)
+
+    _, oc = jax.lax.scan(step, None, (qc, jnp.arange(n_chunks)),
+                         unroll=n_chunks if unroll else 1)
+    d_out = oc.shape[-1]                 # v head dim (differs from q's for MLA)
+    o = oc.transpose(1, 0, 2, 3, 4).reshape(b, q.shape[1], h, d_out)
+    return o[:, :s]
+
+
+def attention_core(q, k, v, *, causal: bool = True, window: int = 0,
+                   impl: str = "dense", chunk: int = 512,
+                   unroll: bool = False, interpret: bool = True):
+    if impl == "dense":
+        return _dense_attention(q, k, v, causal=causal, window=window)
+    if impl == "chunked":
+        return _chunked_attention(q, k, v, causal=causal, window=window,
+                                  chunk=chunk, unroll=unroll)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        qt = q.transpose(0, 2, 1, 3)
+        kt = k.transpose(0, 2, 1, 3)
+        vt = v.transpose(0, 2, 1, 3)
+        o = kops.flash_attention(qt, kt, vt, causal=causal, window=window,
+                                 block_q=min(128, q.shape[1]),
+                                 block_k=min(128, k.shape[1]),
+                                 interpret=interpret)
+        return o.transpose(0, 2, 1, 3)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):
+    """Single-token decode: q (B,1,H,hd); caches (B,T,Kv,hd); ``pos`` (scalar)
+    is the number of valid cache entries.  Softmax masks the cache tail (and
+    the sliding window); with the cache length dim sharded over ``model``,
+    GSPMD lowers the reductions to psums — context-parallel decode."""
+    b, _, h, hd = q.shape
+    t, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    cols = jnp.arange(t)
+    mask = cols < pos
+    if window > 0:
+        mask &= cols > pos - 1 - window
+    scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v_cache)
+    return o.reshape(b, 1, h, hd)
+
+
+# --------------------------------------------------------------------------
+# Standard GQA attention block (params + apply)
+# --------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    return {
+        "wq": p_((d, h, hd), ("embed", "heads", None)),
+        "wk": p_((d, kv, hd), ("embed", "kv", None)),
+        "wv": p_((d, kv, hd), ("embed", "kv", None)),
+        "wo": p_((h, hd, d), ("heads", None, "embed")),
+    }
+
+
+def attn_apply(p, x, cfg: ModelConfig, *, positions, impl="dense",
+               causal=True, cross_kv=None, cache=None, decode_pos=None):
+    """Returns (out, new_cache).  ``cache``: dict(k=(B,T,Kv,hd), v=...)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cross_kv is not None:
+        k, v = cross_kv
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is not None and cross_kv is None:
+        t = cache["k"].shape[1]
+        if cfg.window and t == cfg.window:
+            # ring buffer: O(window) cache; keys carry their absolute rope
+            # phase, so attention over the ring needs no reordering
+            widx = jnp.mod(decode_pos, t)
+            valid = jnp.minimum(decode_pos + 1, t)
+            ring_window = 0          # ring already holds only the window
+        else:
+            widx = decode_pos
+            valid = decode_pos + 1
+            ring_window = cfg.window
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                               (0, widx, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                               (0, widx, 0, 0))
+        new_cache = {"k": k_cache, "v": v_cache}
+        o = decode_attention(q, k_cache, v_cache, valid, window=ring_window)
+    elif cache is not None:  # cross-attention during decode: static kv
+        o = _dense_attention(q, k, v, causal=False, window=0)
+        new_cache = cache
+    else:
+        o = attention_core(q, k, v, causal=causal and cross_kv is None,
+                           window=cfg.window, impl=impl, chunk=cfg.attn_chunk,
+                           unroll=cfg.scan_unroll)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+
+def mlp_specs(d: int, f: int) -> Dict[str, ParamSpec]:
+    return {
+        "wg": p_((d, f), ("embed", "ffn")),
+        "wu": p_((d, f), ("embed", "ffn")),
+        "wd": p_((f, d), ("ffn", "embed")),
+    }
+
+
+def mlp_apply(p, x):
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"]))
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"])
+    return jnp.einsum("bsf,fd->bsd", g * u, p["wd"])
+
+
+# --------------------------------------------------------------------------
+# Embedding / head (tied)
+# --------------------------------------------------------------------------
+
+
+def embed_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    return {"embedding": p_((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+            "final_norm": p_((cfg.d_model,), ("embed",), init="ones")}
+
+
+def embed_apply(p, tokens):
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def logits_apply(p, x):
+    return jnp.einsum("bsd,vd->bsv", x, p["embedding"])

@@ -1,0 +1,162 @@
+"""Mamba-2 SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the recurrence
+is unrolled into masked matmuls (MXU-friendly quadratic-in-chunk form); across
+chunks a small state scan carries ``(heads, head_dim, state)`` — this is the
+TPU-native form (the original CUDA kernel's warp-level scan has no TPU
+analogue; the matmul duality *is* the adaptation, DESIGN.md §2).
+
+Decode carries O(1) state per layer: ``h ← a·h + dt·B⊗x``; no KV cache, which
+is why the SSM archs run the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec, p_, rms_norm
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    din = cfg.expand * d
+    nh, n = cfg.ssm_heads, cfg.ssm_state
+    return {
+        "wx": p_((d, din), ("embed", "ssm_in")),
+        "wz": p_((d, din), ("embed", "ssm_in")),
+        "wB": p_((d, n), ("embed", None)),
+        "wC": p_((d, n), ("embed", None)),
+        "wdt": p_((d, nh), ("embed", "heads")),
+        "dt_bias": p_((nh,), ("heads",), init="zeros"),
+        "A_log": p_((nh,), ("heads",), init="zeros"),
+        "D": p_((nh,), ("heads",), init="ones"),
+        "conv_w": p_((4, din + 2 * n), (None, None), scale=0.1),
+        "norm": p_((din,), ("ssm_in",), init="ones"),
+        "wo": p_((din, d), ("ssm_in", "embed")),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv, kernel (K, C); u: (B, S, C).
+    Returns (out, new_state) where state is the last K-1 inputs."""
+    k = w.shape[0]
+    if state is None:
+        up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        up = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    out = sum(up[:, i:i + u.shape[1], :] * w[i][None, None, :] for i in range(k))
+    new_state = up[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, A, B_, C_, chunk: int, compute_dtype=jnp.float32):
+    """SSD forward.
+    x: (B,S,H,P)  dt: (B,S,H)  A: (H,) negative  B_,C_: (B,S,N).
+    Returns y: (B,S,H,P).  ``compute_dtype`` controls the dual-form decay /
+    score matrices — the dominant memory traffic (bf16 halves it; the cumsum
+    and inter-chunk state stay f32 for stability)."""
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xq = x.reshape(b, nc, chunk, h, p)
+    dtq = dt.reshape(b, nc, chunk, h)
+    Bq = B_.reshape(b, nc, chunk, n)
+    Cq = C_.reshape(b, nc, chunk, n)
+
+    la = dtq * A[None, None, None, :]                  # log decay per step (<=0)
+    cum = jnp.cumsum(la, axis=2)                       # (b,nc,Q,h)
+
+    # intra-chunk (quadratic-in-chunk dual form)
+    # L[i,j] = exp(cum_i - cum_j) for j <= i
+    li = cum[:, :, :, None, :]                         # (b,nc,Q,1,h)
+    lj = cum[:, :, None, :, :]                         # (b,nc,1,Q,h)
+    idx = jnp.arange(chunk)
+    causal = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(li - lj), 0.0).astype(compute_dtype)
+    sc = jnp.einsum("bcin,bcjn->bcij", Cq.astype(compute_dtype),
+                    Bq.astype(compute_dtype),
+                    preferred_element_type=compute_dtype)
+    w = sc[..., None] * L * dtq[:, :, None, :, :].astype(compute_dtype)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xq.astype(compute_dtype),
+                         preferred_element_type=jnp.float32)
+
+    # chunk state: S_c = Σ_j exp(cum_end - cum_j)·dt_j·B_j ⊗ x_j — contracted
+    # over j by einsum so the (Q,h,n,p) outer product never materializes
+    decay_tail = jnp.exp(cum[:, :, -1:, :] - cum)      # (b,nc,Q,h)
+    S_c = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", dtq * decay_tail, Bq, xq)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # (b,nc,h)
+
+    def scan_fn(hprev, inp):
+        s_c, dec = inp                                 # (b,h,n,p), (b,h)
+        hnew = hprev * dec[:, :, None, None] + s_c
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, n, p), dtype=jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (S_c.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2).astype(jnp.float32)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)         # (b,nc,h,n,p) state before chunk
+
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp",
+                         Cq, h_prevs.astype(Cq.dtype), jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y
+
+
+def mamba_apply(p, x, cfg: ModelConfig, *, state: Optional[dict] = None):
+    """Returns (out, new_state).  state = {"h": (B,H,N,P), "conv": (B,3,C)}."""
+    b, s, d = x.shape
+    nh, n, hp = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    din = cfg.expand * d
+
+    xz = jnp.einsum("bsd,de->bse", x, p["wx"])
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    Bc = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Cc = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", x, p["wdt"]) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    u = jnp.concatenate([xz, Bc, Cc], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = _causal_conv(u, p["conv_w"], conv_state)
+    xz, Bc, Cc = u[..., :din], u[..., din:din + n], u[..., din + n:]
+
+    xh = xz.reshape(b, s, nh, hp)
+    if state is None:
+        cd = jnp.bfloat16 if cfg.ssd_bf16 else jnp.float32
+        y = ssd_chunked(xh.astype(jnp.float32), dt.astype(jnp.float32), A,
+                        Bc.astype(jnp.float32), Cc.astype(jnp.float32),
+                        cfg.ssm_chunk, compute_dtype=cd)
+        new_h = None
+    else:
+        # single-token recurrence: h <- a·h + dt·B⊗x ; y = C·h
+        a = jnp.exp(dt[:, 0] * A[None, :])                       # (b,h)
+        hprev = state["h"].astype(jnp.float32)                   # (b,h,n,p)
+        upd = (dt[:, 0])[:, :, None, None] * \
+            Bc[:, 0].astype(jnp.float32)[:, None, :, None] * \
+            xh[:, 0].astype(jnp.float32)[:, :, None, :]
+        new_h32 = hprev * a[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cc[:, 0].astype(jnp.float32), new_h32)
+        y = y[:, None]                                            # (b,1,h,p)
+        new_h = new_h32.astype(state["h"].dtype)
+
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("be,ed->bd", y.reshape(b * s, din), p["wo"]).reshape(b, s, d)
+    new_state = None if state is None else {"h": new_h, "conv": new_conv}
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype):
+    nh, n, hp = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    din = cfg.expand * cfg.d_model
+    return {"h": jnp.zeros((batch, nh, n, hp), jnp.float32),
+            "conv": jnp.zeros((batch, 3, din + 2 * n), dtype)}

@@ -1,0 +1,75 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — compressed KV cache.
+
+The KV path is compressed to a joint latent ``c_kv`` of dim ``kv_lora`` plus a
+decoupled shared rope key of dim ``rope_dim``; the cache stores only
+``(B, T, kv_lora + rope_dim)`` — the arch's whole point for long-context
+serving.  Decode uses the absorption trick: q is projected into latent space
+so attention runs directly against the compressed cache, and the value
+up-projection is applied after the weighted sum.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec, attention_core, p_, rope
+
+
+def mla_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h, hd, ck, rd = cfg.d_model, cfg.n_heads, cfg.hd, cfg.kv_lora, cfg.rope_dim
+    return {
+        "wq": p_((d, h, hd + rd), ("embed", "heads", None)),
+        "wdkv": p_((d, ck), ("embed", None)),
+        "wkrope": p_((d, rd), ("embed", None)),
+        "wkup": p_((ck, h, hd), (None, "heads", None)),
+        "wvup": p_((ck, h, hd), (None, "heads", None)),
+        "wo": p_((h, hd, d), ("heads", None, "embed")),
+    }
+
+
+def mla_apply(p, x, cfg: ModelConfig, *, positions, impl="dense",
+              cache: Optional[dict] = None, decode_pos=None):
+    """Returns (out, new_cache). cache = {"c": (B,T,ck), "kr": (B,T,rd)}."""
+    h, hd, rd = cfg.n_heads, cfg.hd, cfg.rope_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    c = jnp.einsum("bsd,dc->bsc", x, p["wdkv"])                      # latent
+    kr = rope(jnp.einsum("bsd,dr->bsr", x, p["wkrope"])[:, :, None, :],
+              positions, cfg.rope_theta)[:, :, 0, :]                 # shared rope key
+
+    if cache is None:
+        # training / prefill: expand the latent and run standard attention
+        k_nope = jnp.einsum("bsc,chk->bshk", c, p["wkup"])
+        v = jnp.einsum("bsc,chk->bshk", c, p["wvup"])
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            kr[:, :, None, :], kr.shape[:2] + (h, rd))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = attention_core(qq, k, v, causal=True, impl=impl,
+                           chunk=cfg.attn_chunk, unroll=cfg.scan_unroll)
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+        return out, None
+
+    # decode with absorption: attend in latent space against the compressed cache
+    c_cache = jax.lax.dynamic_update_slice(cache["c"], c.astype(cache["c"].dtype),
+                                           (0, decode_pos, 0))
+    kr_cache = jax.lax.dynamic_update_slice(cache["kr"], kr.astype(cache["kr"].dtype),
+                                            (0, decode_pos, 0))
+    q_lat = jnp.einsum("bshk,chk->bshc", q_nope, p["wkup"])          # absorb W_kup
+    s_lat = jnp.einsum("bshc,btc->bhst", q_lat, c_cache)
+    s_rope = jnp.einsum("bshr,btr->bhst", q_rope, kr_cache)
+    scores = (s_lat + s_rope).astype(jnp.float32) / np.sqrt(hd + rd)
+    t = c_cache.shape[1]
+    mask = jnp.arange(t) <= decode_pos
+    scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+    pr = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhst,btc->bshc", pr, c_cache)
+    o = jnp.einsum("bshc,chk->bshk", o_lat, p["wvup"])               # absorb W_vup
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"c": c_cache, "kr": kr_cache}

@@ -1,0 +1,441 @@
+"""Model assembly for all assigned architecture families.
+
+Every family exposes the same four entry points used by the launcher:
+
+  model_specs(cfg)                  -> ParamSpec tree (init/sharding/dry-run)
+  forward(params, batch, cfg, impl) -> (logits, aux dict)       [train/prefill]
+  cache_specs(cfg, batch, max_len)  -> ParamSpec tree for the decode cache
+  decode_step(params, cache, tokens, pos, cfg, context) -> (logits, new cache)
+
+Homogeneous layer stacks are scanned (``lax.scan`` over stacked params) with
+per-layer remat — compile time stays flat in depth (100-layer archs lower in
+seconds, not minutes).  Heterogeneous patterns (vision cross-attn every 5th
+layer, zamba2's shared attention block every 6th) become scans over
+*super-blocks*.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import mamba2 as m2
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (ParamSpec, attn_apply, attn_specs,
+                                 embed_apply, embed_specs, logits_apply,
+                                 mlp_apply, mlp_specs, p_, rms_norm)
+
+
+# --------------------------------------------------------------------------
+# Spec helpers
+# --------------------------------------------------------------------------
+
+
+def stack_specs(specs, n: int):
+    """Add a leading stacked-layers dim to every ParamSpec in the tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _norm(d):
+    return p_((d,), ("embed",), init="ones")
+
+
+def dense_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    attn = mla_mod.mla_specs(cfg) if cfg.kv_lora else attn_specs(cfg)
+    return {"ln1": _norm(d), "attn": attn, "ln2": _norm(d),
+            "mlp": mlp_specs(d, cfg.d_ff)}
+
+
+def moe_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    attn = mla_mod.mla_specs(cfg) if cfg.kv_lora else attn_specs(cfg)
+    return {"ln1": _norm(d), "attn": attn, "ln2": _norm(d),
+            "moe": moe_mod.moe_specs(cfg)}
+
+
+def ssm_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"ln1": _norm(cfg.d_model), "mamba": m2.mamba_specs(cfg)}
+
+
+def cross_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {"ln1": _norm(d), "attn": attn_specs(cfg), "ln2": _norm(d),
+            "mlp": mlp_specs(d, cfg.d_ff)}
+
+
+def model_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    s: Dict[str, Any] = dict(embed_specs(cfg))
+    fam = cfg.family
+    if fam in ("dense",):
+        s["layers"] = stack_specs(dense_block_specs(cfg), cfg.n_layers)
+    elif fam == "moe":
+        s["layers"] = stack_specs(moe_block_specs(cfg), cfg.n_layers)
+    elif fam == "ssm":
+        s["layers"] = stack_specs(ssm_block_specs(cfg), cfg.n_layers)
+    elif fam == "hybrid":
+        g, r = divmod(cfg.n_layers, cfg.attn_every)
+        s["groups"] = stack_specs(stack_specs(ssm_block_specs(cfg), cfg.attn_every), g)
+        if r:
+            s["tail"] = stack_specs(ssm_block_specs(cfg), r)
+        s["shared_attn"] = dense_block_specs(cfg)    # ONE shared block, reused
+    elif fam == "vlm":
+        assert cfg.n_layers % cfg.cross_every == 0
+        n_super = cfg.n_layers // cfg.cross_every
+        n_self = cfg.cross_every - 1
+        s["super"] = {
+            "self": stack_specs(stack_specs(dense_block_specs(cfg), n_self), n_super),
+            "cross": stack_specs(cross_block_specs(cfg), n_super),
+        }
+    elif fam == "audio":
+        s["enc_pos"] = p_((cfg.encoder_frames, cfg.d_model), (None, "embed"))
+        s["encoder"] = stack_specs(dense_block_specs(cfg), cfg.encoder_layers)
+        s["enc_norm"] = _norm(cfg.d_model)
+        dec = {"ln1": _norm(cfg.d_model), "self": attn_specs(cfg),
+               "ln2": _norm(cfg.d_model), "cross": attn_specs(cfg),
+               "ln3": _norm(cfg.d_model), "mlp": mlp_specs(cfg.d_model, cfg.d_ff)}
+        s["decoder"] = stack_specs(dec, cfg.n_layers)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return s
+
+
+# --------------------------------------------------------------------------
+# Blocks (apply)
+# --------------------------------------------------------------------------
+
+
+def _apply_attn(p, x, cfg, *, positions, impl, cache=None, decode_pos=None,
+                cross_kv=None, causal=True):
+    if cfg.kv_lora and cross_kv is None:
+        return mla_mod.mla_apply(p, x, cfg, positions=positions, impl=impl,
+                                 cache=cache, decode_pos=decode_pos)
+    return attn_apply(p, x, cfg, positions=positions, impl=impl, causal=causal,
+                      cross_kv=cross_kv, cache=cache, decode_pos=decode_pos)
+
+
+def dense_block(p, x, cfg, *, positions, impl, cache=None, decode_pos=None,
+                causal=True):
+    h, nc = _apply_attn(p["attn"], rms_norm(x, p["ln1"]), cfg,
+                        positions=positions, impl=impl, cache=cache,
+                        decode_pos=decode_pos, causal=causal)
+    x = x + h
+    x = x + mlp_apply(p["mlp"], rms_norm(x, p["ln2"]))
+    return constrain(x, "batch", "seq", None), nc
+
+
+def moe_block(p, x, cfg, *, positions, impl, cache=None, decode_pos=None):
+    h, nc = _apply_attn(p["attn"], rms_norm(x, p["ln1"]), cfg,
+                        positions=positions, impl=impl, cache=cache,
+                        decode_pos=decode_pos)
+    x = x + h
+    h, aux = moe_mod.moe_apply(p["moe"], rms_norm(x, p["ln2"]), cfg)
+    x = x + h
+    return constrain(x, "batch", "seq", None), nc, aux
+
+
+def ssm_block(p, x, cfg, *, state=None):
+    h, ns = m2.mamba_apply(p["mamba"], rms_norm(x, p["ln1"]), cfg, state=state)
+    return constrain(x + h, "batch", "seq", None), ns
+
+
+def cross_block(p, x, cfg, *, context, impl):
+    kv = {"k": jnp.einsum("btd,dhk->bthk", context, p["attn"]["wk"]),
+          "v": jnp.einsum("btd,dhk->bthk", context, p["attn"]["wv"])}
+    h, _ = attn_apply(p["attn"], rms_norm(x, p["ln1"]), cfg, positions=None,
+                      impl=impl, causal=False, cross_kv=(kv["k"], kv["v"]))
+    x = x + h
+    x = x + mlp_apply(p["mlp"], rms_norm(x, p["ln2"]))
+    return constrain(x, "batch", "seq", None)
+
+
+
+def _scan(cfg: ModelConfig, f, init, xs):
+    """lax.scan that fully unrolls in roofline-measurement mode (see
+    ModelConfig.scan_unroll): XLA cost analysis counts while-loop bodies
+    once, so measurement builds unroll to get true per-step costs."""
+    length = jax.tree.leaves(xs)[0].shape[0]
+    return jax.lax.scan(f, init, xs, unroll=length if cfg.scan_unroll else 1)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+# --------------------------------------------------------------------------
+# Forward (training / prefill)
+# --------------------------------------------------------------------------
+
+
+def forward(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            impl: str = "dense") -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    x, aux = forward_hidden(params, batch, cfg, impl)
+    logits = logits_apply(params, x)
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits, aux
+
+
+def forward_hidden(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                   impl: str = "dense") -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Backbone forward up to the final norm (the LM head is applied in
+    sequence chunks by the trainer so (B, S, vocab) logits never fully
+    materialize — vocab=152k at S=4k would be tens of GB per device)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = embed_apply(params, tokens).astype(cfg.jdtype)
+    x = constrain(x, "batch", "seq", None)
+    aux_total = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam == "dense":
+        def body(x, pl):
+            y, _ = dense_block(pl, x, cfg, positions=positions, impl=impl)
+            return y, None
+        x, _ = _scan(cfg, _maybe_remat(body, cfg), x, params["layers"])
+    elif fam == "moe":
+        def body(carry, pl):
+            x, aux = carry
+            y, _, a = moe_block(pl, x, cfg, positions=positions, impl=impl)
+            return (y, aux + a), None
+        (x, aux_total), _ = _scan(cfg, _maybe_remat(body, cfg), (x, aux_total), params["layers"])
+    elif fam == "ssm":
+        def body(x, pl):
+            y, _ = ssm_block(pl, x, cfg)
+            return y, None
+        x, _ = _scan(cfg, _maybe_remat(body, cfg), x, params["layers"])
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def inner(x, pl):
+            y, _ = ssm_block(pl, x, cfg)
+            return y, None
+
+        def group(x, gl):
+            x, _ = _scan(cfg, _maybe_remat(inner, cfg), x, gl)
+            x, _ = dense_block(shared, x, cfg, positions=positions, impl=impl)
+            return x, None
+
+        x, _ = _scan(cfg, group, x, params["groups"])
+        if "tail" in params:
+            x, _ = _scan(cfg, _maybe_remat(inner, cfg), x, params["tail"])
+    elif fam == "vlm":
+        vision = batch["vision"].astype(cfg.jdtype)
+
+        def self_body(x, pl):
+            y, _ = dense_block(pl, x, cfg, positions=positions, impl=impl)
+            return y, None
+
+        def super_body(x, pl):
+            x, _ = _scan(cfg, _maybe_remat(self_body, cfg), x, pl["self"])
+            x = cross_block(pl["cross"], x, cfg, context=vision, impl=impl)
+            return x, None
+
+        x, _ = _scan(cfg, super_body, x, params["super"])
+    elif fam == "audio":
+        enc = _encode_audio(params, batch["frames"].astype(cfg.jdtype), cfg, impl)
+
+        def dec_body(x, pl):
+            h, _ = attn_apply(pl["self"], rms_norm(x, pl["ln1"]), cfg,
+                              positions=positions, impl=impl, causal=True)
+            x = x + h
+            kv = (jnp.einsum("btd,dhk->bthk", enc, pl["cross"]["wk"]),
+                  jnp.einsum("btd,dhk->bthk", enc, pl["cross"]["wv"]))
+            h, _ = attn_apply(pl["cross"], rms_norm(x, pl["ln2"]), cfg,
+                              positions=None, impl=impl, causal=False,
+                              cross_kv=kv)
+            x = x + h
+            x = x + mlp_apply(pl["mlp"], rms_norm(x, pl["ln3"]))
+            return constrain(x, "batch", "seq", None), None
+
+        x, _ = _scan(cfg, _maybe_remat(dec_body, cfg), x, params["decoder"])
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"])
+    return x, {"aux_loss": aux_total / max(cfg.n_layers, 1)}
+
+
+def _encode_audio(params, frames, cfg: ModelConfig, impl: str):
+    x = frames + params["enc_pos"][None, :frames.shape[1]].astype(frames.dtype)
+    positions = jnp.arange(frames.shape[1], dtype=jnp.int32)
+
+    def body(x, pl):
+        y, _ = dense_block(pl, x, cfg, positions=positions, impl=impl,
+                           causal=False)
+        return y, None
+
+    x, _ = _scan(cfg, _maybe_remat(body, cfg), x, params["encoder"])
+    return rms_norm(x, params["enc_norm"])
+
+
+# --------------------------------------------------------------------------
+# Decode caches + serve step
+# --------------------------------------------------------------------------
+
+
+def _kv_cache_specs(cfg: ModelConfig, n: int, batch: int, max_len: int):
+    if cfg.kv_lora:
+        return {"c": p_((n, batch, max_len, cfg.kv_lora),
+                        ("layers", "cache_batch", "cache_seq", None), init="zeros"),
+                "kr": p_((n, batch, max_len, cfg.rope_dim),
+                         ("layers", "cache_batch", "cache_seq", None), init="zeros")}
+    # sliding-window archs only need a window-sized cache (ring addressing is
+    # a serve-time optimization; here the dry-run allocates the window)
+    t = min(max_len, cfg.window) if cfg.window else max_len
+    return {"k": p_((n, batch, t, cfg.n_kv, cfg.hd),
+                    ("layers", "cache_batch", "cache_seq", "kv", None), init="zeros"),
+            "v": p_((n, batch, t, cfg.n_kv, cfg.hd),
+                    ("layers", "cache_batch", "cache_seq", "kv", None), init="zeros")}
+
+
+def _ssm_state_specs(cfg: ModelConfig, lead: Tuple[int, ...], batch: int):
+    nh, n, hp = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    din = cfg.expand * cfg.d_model
+    laxes = ("layers",) * len(lead)
+    return {"h": ParamSpec(lead + (batch, nh, n, hp),
+                           laxes + ("cache_batch", "heads", None, None), "zeros", 0.0),
+            "conv": ParamSpec(lead + (batch, 3, din + 2 * n),
+                              laxes + ("cache_batch", None, None), "zeros", 0.0)}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return {"kv": _kv_cache_specs(cfg, cfg.n_layers, batch, max_len)}
+    if fam == "ssm":
+        return {"ssm": _ssm_state_specs(cfg, (cfg.n_layers,), batch)}
+    if fam == "hybrid":
+        g, r = divmod(cfg.n_layers, cfg.attn_every)
+        out = {"groups": _ssm_state_specs(cfg, (g, cfg.attn_every), batch),
+               "shared_kv": _kv_cache_specs(cfg, g, batch, max_len)}
+        if r:
+            out["tail"] = _ssm_state_specs(cfg, (r,), batch)
+        return out
+    if fam == "vlm":
+        n_super = cfg.n_layers // cfg.cross_every
+        return {"kv": _kv_cache_specs(cfg, n_super * (cfg.cross_every - 1),
+                                      batch, max_len)}
+    if fam == "audio":
+        return {"kv": _kv_cache_specs(cfg, cfg.n_layers, batch, max_len)}
+    raise ValueError(fam)
+
+
+def encode_context(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                   impl: str = "dense") -> Optional[jnp.ndarray]:
+    """The static per-request context consumed by decode_step: the audio
+    encoder output for enc-dec archs (run once per request, not per token),
+    or the vision embeddings as-is for vlm."""
+    if cfg.family == "audio":
+        return _encode_audio(params, batch["frames"].astype(cfg.jdtype), cfg, impl)
+    if cfg.family == "vlm":
+        return batch["vision"].astype(cfg.jdtype)
+    return None
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
+                context: Optional[jnp.ndarray] = None):
+    """One-token decode. tokens: (B, 1); pos: scalar int32 (cache fill level).
+    context: vision embeds / encoder output for vlm/audio."""
+    b = tokens.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    x = embed_apply(params, tokens).astype(cfg.jdtype)
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        def body(x, inp):
+            pl, cl = inp
+            if fam == "moe":
+                y, nc, _ = moe_block(pl, x, cfg, positions=positions,
+                                     impl="dense", cache=cl, decode_pos=pos)
+            else:
+                y, nc = dense_block(pl, x, cfg, positions=positions,
+                                    impl="dense", cache=cl, decode_pos=pos)
+            return y, nc
+        x, new_kv = _scan(cfg, body, x, (params["layers"], cache["kv"]))
+        new_cache = {"kv": new_kv}
+    elif fam == "ssm":
+        def body(x, inp):
+            pl, st = inp
+            y, ns = ssm_block(pl, x, cfg, state=st)
+            return y, ns
+        x, new_ssm = _scan(cfg, body, x, (params["layers"], cache["ssm"]))
+        new_cache = {"ssm": new_ssm}
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def inner(x, inp):
+            pl, st = inp
+            y, ns = ssm_block(pl, x, cfg, state=st)
+            return y, ns
+
+        def group(x, inp):
+            gl, gst, kvl = inp
+            x, ns = _scan(cfg, inner, x, (gl, gst))
+            x, nkv = dense_block(shared, x, cfg, positions=positions,
+                                 impl="dense", cache=kvl, decode_pos=pos)
+            return x, (ns, nkv)
+
+        x, (new_g, new_kv) = jax.lax.scan(
+            group, x, (params["groups"], cache["groups"], cache["shared_kv"]))
+        new_cache = {"groups": new_g, "shared_kv": new_kv}
+        if "tail" in params:
+            x, new_tail = _scan(cfg, inner, x, (params["tail"], cache["tail"]))
+            new_cache["tail"] = new_tail
+    elif fam == "vlm":
+        vision = context.astype(cfg.jdtype)
+
+        def self_body(x, inp):
+            pl, cl = inp
+            y, nc = dense_block(pl, x, cfg, positions=positions, impl="dense",
+                                cache=cl, decode_pos=pos)
+            return y, nc
+
+        n_super = cfg.n_layers // cfg.cross_every
+        n_self = cfg.cross_every - 1
+        kv = jax.tree.map(
+            lambda a: a.reshape((n_super, n_self) + a.shape[1:]), cache["kv"])
+
+        def super_body(x, inp):
+            pl, kvg = inp
+            x, nkv = _scan(cfg, self_body, x, (pl["self"], kvg))
+            x = cross_block(pl["cross"], x, cfg, context=vision, impl="dense")
+            return x, nkv
+
+        x, new_kv = _scan(cfg, super_body, x, (params["super"], kv))
+        new_cache = {"kv": jax.tree.map(
+            lambda a: a.reshape((n_super * n_self,) + a.shape[2:]), new_kv)}
+    elif fam == "audio":
+        enc = context.astype(cfg.jdtype)
+
+        def body(x, inp):
+            pl, cl = inp
+            h, nc = attn_apply(pl["self"], rms_norm(x, pl["ln1"]), cfg,
+                               positions=positions, impl="dense",
+                               cache=cl, decode_pos=pos)
+            x = x + h
+            kv = (jnp.einsum("btd,dhk->bthk", enc, pl["cross"]["wk"]),
+                  jnp.einsum("btd,dhk->bthk", enc, pl["cross"]["wv"]))
+            h, _ = attn_apply(pl["cross"], rms_norm(x, pl["ln2"]), cfg,
+                              positions=None, impl="dense", causal=False,
+                              cross_kv=kv)
+            x = x + h
+            x = x + mlp_apply(pl["mlp"], rms_norm(x, pl["ln3"]))
+            return x, nc
+
+        x, new_kv = _scan(cfg, body, x, (params["decoder"], cache["kv"]))
+        new_cache = {"kv": new_kv}
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = logits_apply(params, x)
+    return constrain(logits, "batch", None, "vocab"), new_cache

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN with capacity-bucketed top-k dispatch.
+
+Pure-jnp formulation that GSPMD shards end-to-end: experts live on the
+``model`` mesh axis (expert parallelism), tokens on (``pod``, ``data``).
+Dispatch buckets the top-k assignments into a dense ``(E, C, d)`` tensor via
+cumsum ranking (no sort), runs batched per-expert einsums on the MXU, and
+scatters back with routing weights.  Tokens beyond an expert's capacity
+``C = ceil(T·k/E · capacity_factor)`` are dropped (standard GShard/Switch
+semantics) — the routing weights renormalize over surviving assignments.
+
+The auxiliary load-balance loss (Switch-style f·P) and router statistics are
+returned alongside; router stats are exactly a *group-by-expert aggregate*,
+and the framework also exposes them through the LMFAO engine path (DESIGN.md
+§Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec, p_
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    specs = {
+        "router": p_((d, e), ("embed", "experts")),
+        "wg": p_((e, d, f), ("experts", "embed", None)),
+        "wu": p_((e, d, f), ("experts", "embed", None)),
+        "wd": p_((e, f, d), ("experts", None, "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        specs.update({
+            "swg": p_((d, fs), ("embed", "ffn")),
+            "swu": p_((d, fs), ("embed", "ffn")),
+            "swd": p_((fs, d), ("ffn", "embed")),
+        })
+    return specs
+
+
+def _dispatch_groups(cfg: ModelConfig, t: int) -> int:
+    g = max(min(cfg.moe_groups, t), 1)
+    while t % g:
+        g -= 1
+    return g
+
+
+def moe_apply(p, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Grouped dispatch (GShard): tokens split into ``moe_groups`` contiguous
+    groups aligned with the batch sharding; ranking cumsums and capacities
+    are per group, so dispatch never reduces across data shards (the global
+    cumsum was the dominant collective in the baseline — EXPERIMENTS.md
+    §Perf Cell C)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    ng = _dispatch_groups(cfg, t)
+    tg = t // ng
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                    # (t, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: fraction of tokens per expert × mean router prob
+    onehot_k = jax.nn.one_hot(top_e, e, dtype=jnp.float32)    # (t, k, e)
+    load = onehot_k.sum(axis=(0, 1)) / (t * k)
+    importance = probs.mean(axis=0)
+    aux = e * jnp.sum(load * importance)
+
+    # per-group capacity bucketing: rank within (group, expert) via cumsum
+    cap = int(math.ceil(tg * k / e * cfg.capacity_factor))
+    ge = top_e.reshape(ng, tg * k)
+    gw = top_w.reshape(ng, tg * k)
+    oh = jax.nn.one_hot(ge, e, dtype=jnp.int32)               # (g, tg·k, e)
+    rank = jnp.cumsum(oh, axis=1) - oh                        # prior count in group
+    pos = jnp.take_along_axis(rank, ge[..., None], axis=2)[..., 0]
+    keep = pos < cap
+    w_kept = jnp.where(keep, gw, 0.0)
+
+    # scatter token vectors into (g, e, cap, d) buckets via per-group
+    # segment_sum (vmapped: stays local to the group's shard)
+    bucket_id = jnp.where(keep, ge * cap + pos, e * cap)      # overflow row
+    xg = xf.reshape(ng, tg, d)
+    src = jnp.take_along_axis(
+        xg, jnp.repeat(jnp.arange(tg), k)[None, :, None].astype(jnp.int32)
+        * jnp.ones((ng, 1, 1), jnp.int32), axis=1)            # (g, tg·k, d)
+    seg = jax.vmap(lambda s_, i_: jax.ops.segment_sum(
+        s_, i_, num_segments=e * cap + 1))(
+        src * keep[..., None].astype(src.dtype), bucket_id)
+    buckets = seg[:, :-1].reshape(ng, e, cap, d)
+    buckets = constrain(buckets, "batch", "experts", None, None)
+
+    # batched per-expert FFN (MXU)
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buckets, p["wg"]))
+    u = jnp.einsum("gecd,edf->gecf", buckets, p["wu"])
+    yb = jnp.einsum("gecf,efd->gecd", g * u, p["wd"])         # (g, e, cap, d)
+    yb = constrain(yb, "batch", "experts", None, None)
+
+    # gather back + weighted combine over the k assignments
+    safe_bucket = jnp.where(keep, ge * cap + pos, 0)          # (g, tg·k)
+    y_flat = jnp.take_along_axis(
+        yb.reshape(ng, e * cap, d), safe_bucket[..., None], axis=1)
+    y = (y_flat * w_kept[..., None].astype(y_flat.dtype)) \
+        .reshape(ng, tg, k, d).sum(axis=2)
+
+    out = y.reshape(b, s, d).astype(x.dtype)
+    if cfg.n_shared_experts:
+        gs = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["swg"]))
+        us = jnp.einsum("bsd,df->bsf", x, p["swu"])
+        out = out + jnp.einsum("bsf,fd->bsd", gs * us, p["swd"])
+    return out, aux
+
+
+def router_stats(p, x, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Per-expert load counters — the group-by-expert aggregate (also
+    computable through repro.core for the in-database formulation)."""
+    t = x.shape[0] * x.shape[1]
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1).reshape(t, cfg.n_experts)
+    _, top_e = jax.lax.top_k(probs, cfg.top_k)
+    counts = jnp.zeros(cfg.n_experts).at[top_e.reshape(-1)].add(1.0)
+    return {"expert_load": counts, "router_entropy":
+            -jnp.mean(jnp.sum(probs * jnp.log(probs + 1e-9), axis=-1))}

@@ -1,0 +1,66 @@
+"""AdamW in raw JAX (pytree-generic, dtype-safe for bf16 params).
+
+Moments are kept in float32 regardless of parameter dtype; the update is
+computed in float32 and cast back — the standard mixed-precision recipe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def init_moments(params) -> Tuple[Any, Any]:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return jax.tree.map(z, params), jax.tree.map(z, params)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), n
+
+
+def update(params, grads, m, v, step, lr, cfg: AdamWConfig):
+    """Returns (new_params, new_m, new_v, grad_norm)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m_, v_):
+        g32 = g.astype(jnp.float32)
+        m_n = cfg.b1 * m_ + (1 - cfg.b1) * g32
+        v_n = cfg.b2 * v_ + (1 - cfg.b2) * g32 * g32
+        mhat = m_n / bc1
+        vhat = v_n / bc2
+        p32 = p.astype(jnp.float32)
+        step_ = lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p32)
+        return (p32 - step_).astype(p.dtype), m_n, v_n
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(m)
+    flat_v = tdef.flatten_up_to(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, new_m, new_v, gnorm

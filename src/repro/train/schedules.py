@@ -1,0 +1,28 @@
+"""LR schedules: cosine (default) and WSD (warmup-stable-decay, MiniCPM)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, peak_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup: int, total: int, decay_frac: float = 0.1,
+        min_frac: float = 0.01):
+    """Warmup -> stable plateau -> short exponential-ish decay (MiniCPM §4)."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_start = total * (1 - decay_frac)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1), 0.0, 1.0)
+    decay = peak_lr * (min_frac ** prog)
+    out = jnp.where(step < warmup, warm, peak_lr)
+    return jnp.where(step > decay_start, decay, out)
+
+
+SCHEDULES = {"cosine": cosine, "wsd": wsd}

@@ -1,0 +1,196 @@
+"""Train / prefill step builders with GSPMD sharding.
+
+Features:
+  * chunked cross-entropy — the LM head + softmax run over sequence chunks
+    (rematerialized), so (B, S, vocab) logits never materialize;
+  * microbatch gradient accumulation via ``lax.scan`` (compute/comm overlap:
+    the per-microbatch backward's reduce-scatters overlap the next
+    microbatch's forward under XLA's async collectives);
+  * optional int8 error-feedback gradient compression between accumulation
+    and the optimizer (distributed/compression.py);
+  * AdamW with global-norm clipping, cosine/WSD schedules.
+
+State layout (a plain dict pytree): params / m / v / step / (ef residual).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import compression as comp
+from repro.distributed.sharding import (mesh_context, param_pspecs, rules_for,
+                                        spec_for)
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.layers import abstract_params, init_params, logits_apply
+from repro.train import adamw
+from repro.train.schedules import SCHEDULES
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"
+    adam: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
+    ce_chunk: int = 512
+    grad_accum: int = 1
+    aux_loss_weight: float = 0.01
+    compress_grads: bool = False
+    attn_impl: str = "chunked"
+
+
+def chunked_ce(params, x, labels, mask, cfg: ModelConfig, chunk: int):
+    """Mean next-token CE; head applied per sequence chunk under remat."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(xi, li, mi):
+        from repro.distributed.sharding import constrain
+        logits = logits_apply(params, xi).astype(jnp.float32)
+        logits = constrain(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mi)
+
+    def body(acc, xs):
+        xi, li, mi = xs
+        return acc + chunk_loss(xi, li, mi), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc, mc))
+    return total / jnp.maximum(mask.sum(), 1.0)
+
+
+def _loss_fn(params, batch, cfg: ModelConfig, tcfg: TrainConfig):
+    x, aux = M.forward_hidden(params, batch, cfg, impl=tcfg.attn_impl)
+    tokens = batch["tokens"]
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+    loss = chunked_ce(params, x, labels, mask, cfg, tcfg.ce_chunk)
+    loss = loss + tcfg.aux_loss_weight * aux["aux_loss"]
+    return loss, aux
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    mesh: Optional[Mesh] = None, rules=None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    sched = SCHEDULES[tcfg.schedule]
+
+    def train_step(state, batch):
+        with mesh_context(mesh, rules):
+            params = state["params"]
+            if tcfg.grad_accum > 1:
+                micro = jax.tree.map(
+                    lambda a: a.reshape((tcfg.grad_accum, a.shape[0] // tcfg.grad_accum)
+                                        + a.shape[1:]), batch)
+
+                def acc_body(carry, mb):
+                    gsum, lsum = carry
+                    (l, _), g = jax.value_and_grad(_loss_fn, has_aux=True)(
+                        params, mb, cfg, tcfg)
+                    return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+                zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, ltot), _ = jax.lax.scan(acc_body, (zeros, 0.0), micro)
+                grads = jax.tree.map(lambda g: g / tcfg.grad_accum, grads)
+                loss = ltot / tcfg.grad_accum
+            else:
+                (loss, _), grads = jax.value_and_grad(_loss_fn, has_aux=True)(
+                    params, batch, cfg, tcfg)
+
+            if tcfg.compress_grads:
+                grads, new_ef = comp.compress_decompress(grads, state["ef"])
+            else:
+                new_ef = state.get("ef")
+
+            lr = sched(state["step"], peak_lr=tcfg.peak_lr, warmup=tcfg.warmup,
+                       total=tcfg.total_steps)
+            new_p, new_m, new_v, gnorm = adamw.update(
+                params, grads, state["m"], state["v"], state["step"], lr, tcfg.adam)
+            new_state = {"params": new_p, "m": new_m, "v": new_v,
+                         "step": state["step"] + 1}
+            if new_ef is not None:
+                new_state["ef"] = new_ef
+            metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+            return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, tcfg: TrainConfig,
+                      mesh: Optional[Mesh] = None, rules=None):
+    """Forward-only prefill: backbone + last-position logits."""
+
+    def prefill_step(params, batch):
+        with mesh_context(mesh, rules):
+            x, _ = M.forward_hidden(params, batch, cfg, impl=tcfg.attn_impl)
+            logits = logits_apply(params, x[:, -1:, :])
+            return logits
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# State construction + shardings
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: ModelConfig, tcfg: TrainConfig, key) -> Dict[str, Any]:
+    specs = M.model_specs(cfg)
+    params = init_params(specs, key, cfg.jdtype)
+    m, v = adamw.init_moments(params)
+    state = {"params": params, "m": m, "v": v,
+             "step": jnp.zeros((), jnp.int32)}
+    if tcfg.compress_grads:
+        state["ef"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def abstract_state(cfg: ModelConfig, tcfg: TrainConfig) -> Dict[str, Any]:
+    specs = M.model_specs(cfg)
+    params = abstract_params(specs, cfg.jdtype)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    state = {"params": params, "m": jax.tree.map(f32, params),
+             "v": jax.tree.map(f32, params),
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    if tcfg.compress_grads:
+        state["ef"] = jax.tree.map(f32, params)
+    return state
+
+
+def state_pspecs(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh):
+    rules = rules_for(mesh)
+    pspec = param_pspecs(M.model_specs(cfg), rules, mesh)
+    state = {"params": pspec, "m": pspec, "v": pspec, "step": P()}
+    if tcfg.compress_grads:
+        state["ef"] = pspec
+    return state
+
+
+def batch_pspecs(cfg: ModelConfig, mesh: Mesh):
+    rules = rules_for(mesh)
+    bspec = spec_for(("batch", None), rules)
+    out = {"tokens": bspec}
+    if cfg.family == "vlm":
+        out["vision"] = spec_for(("batch", None, None), rules)
+    if cfg.family == "audio":
+        out["frames"] = spec_for(("batch", None, None), rules)
+    return out

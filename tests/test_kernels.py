@@ -1,0 +1,77 @@
+"""Per-kernel shape/dtype sweeps vs. the pure-jnp oracles (interpret mode)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n,f,block", [(64, 4, 32), (1000, 13, 256), (513, 7, 128),
+                                       (2048, 32, 512)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_covar_xtx(n, f, block, dtype):
+    rng = np.random.default_rng(n + f)
+    x = rng.normal(size=(n, f)).astype(dtype)
+    w = (rng.random(n) < 0.8).astype(np.float32)
+    got = ops.covar_xtx(jnp.asarray(x), jnp.asarray(w), block_rows=block,
+                        interpret=True)
+    want = ref.covar_xtx_ref(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("n,s,a,block", [(64, 5, 3, 32), (1000, 37, 5, 128),
+                                         (777, 20, 1, 256), (4096, 64, 16, 512)])
+def test_seg_aggregate(n, s, a, block):
+    rng = np.random.default_rng(n + s)
+    seg = rng.integers(0, s, n).astype(np.int32)
+    pay = rng.normal(size=(n, a)).astype(np.float32)
+    got = ops.seg_aggregate(jnp.asarray(seg), jnp.asarray(pay), s,
+                            block_rows=block, interpret=True)
+    want = ref.seg_aggregate_ref(jnp.asarray(seg), jnp.asarray(pay), s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,d,block", [(100, 20, 64), (1000, 20, 128), (333, 7, 64)])
+def test_tree_hist(n, d, block):
+    rng = np.random.default_rng(n)
+    codes = rng.integers(0, d, n).astype(np.int32)
+    y = rng.normal(size=n).astype(np.float32)
+    cond = (rng.random(n) < 0.5).astype(np.float32)
+    got = ops.tree_hist(jnp.asarray(codes), jnp.asarray(y), jnp.asarray(cond), d,
+                        block_rows=block, interpret=True)
+    want = ref.tree_hist_ref(jnp.asarray(codes), jnp.asarray(y),
+                             jnp.asarray(cond), d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,h,hkv,s,d", [(1, 2, 1, 64, 8), (2, 4, 2, 100, 16),
+                                         (1, 4, 4, 96, 32)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 24), (False, 0)])
+def test_flash_attention(b, h, hkv, s, d, causal, window):
+    rng = np.random.default_rng(b * s)
+    q = rng.normal(size=(b, h, s, d)).astype(np.float32)
+    k = rng.normal(size=(b, hkv, s, d)).astype(np.float32)
+    v = rng.normal(size=(b, hkv, s, d)).astype(np.float32)
+    got = ops.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                              causal=causal, window=window, block_q=32,
+                              block_k=32, interpret=True)
+    want = ref.attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                             causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(1, 2, 64, 16)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 64, 16)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 64, 16)), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                              interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=5e-2, atol=5e-2)
