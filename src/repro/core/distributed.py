@@ -2,10 +2,12 @@
 
 LMFAO partitions the largest relation across threads and merges per-thread
 view hashmaps.  On a TPU mesh we partition the relation's rows across the
-``data`` axis with ``shard_map``; each device runs the same multi-output plans
-on its row shard and the (small, dense) view tensors are ``psum``-combined
-immediately after their group — the collective-friendly direction, since views
-are orders of magnitude smaller than fact tables (paper Table 2).
+``data`` axis with ``shard_map``; each device runs the same fused scan steps
+(the scheduler's shared-scan schedule, DESIGN.md §4/§6) on its row shard and
+the (small, dense) view tensors are ``psum``-combined immediately after their
+step — the collective-friendly direction, since views are orders of magnitude
+smaller than fact tables (paper Table 2).  Fusion is sound under sharding
+because a view is psum'd before any later step gathers it.
 """
 
 from __future__ import annotations

@@ -4,6 +4,10 @@
     batch = eng.compile(queries)              # layers 1-6 + jit (codegen)
     results = batch(db)                       # {query name: dense array}
     results = batch.run_sharded(db, mesh)     # domain-parallel over chips
+
+Compilation lowers through three separable stages (DESIGN.md §3-§5): the
+group-program IR (``ir.py``), the shared-scan scheduler (``schedule.py``),
+and a pluggable lowering backend (``lowering/``: ``xla`` or ``pallas``).
 """
 
 from __future__ import annotations
@@ -26,7 +30,9 @@ from repro.core.schema import DatabaseSchema
 
 @dataclasses.dataclass
 class BatchStats:
-    """Paper Table 2 analogue."""
+    """Paper Table 2 analogue.  ``n_scan_steps`` counts the relation scans
+    actually executed after shared-scan fusion; ``n_fused_scans`` is how many
+    of the ``n_groups`` group scans the scheduler eliminated."""
 
     n_app_aggregates: int
     n_intermediate_cols: int
@@ -34,12 +40,15 @@ class BatchStats:
     n_views: int
     n_groups: int
     group_levels: int
+    n_scan_steps: int
+    n_fused_scans: int
     roots: Dict[str, str]
 
     def summary(self) -> str:
         return (f"A={self.n_app_aggregates} I={self.n_intermediate_cols} "
                 f"V={self.n_views} (pre-merge {self.n_views_premerge}) "
-                f"G={self.n_groups} levels={self.group_levels}")
+                f"G={self.n_groups} levels={self.group_levels} "
+                f"scans={self.n_scan_steps} (fused {self.n_fused_scans})")
 
 
 class CompiledBatch:
@@ -58,6 +67,7 @@ class CompiledBatch:
     @property
     def stats(self) -> BatchStats:
         s = self.result.stats
+        sched = self.plan.schedule
         return BatchStats(
             n_app_aggregates=s.n_app_aggregates,
             n_intermediate_cols=s.n_intermediate_cols,
@@ -65,8 +75,15 @@ class CompiledBatch:
             n_views=s.n_views,
             n_groups=len(self.groups),
             group_levels=len(independent_sets(self.groups)),
+            n_scan_steps=sched.n_scans,
+            n_fused_scans=sched.n_fused_groups,
             roots=self.roots,
         )
+
+    @property
+    def schedule(self):
+        """The fused scan schedule this batch executes."""
+        return self.plan.schedule
 
     # -- single-device ------------------------------------------------------
 
@@ -109,7 +126,8 @@ class CompiledBatch:
 
 
 class Engine:
-    """Layer driver: join tree -> roots -> pushdown+merge -> groups -> plan."""
+    """Layer driver: join tree -> roots -> pushdown+merge -> groups -> IR ->
+    schedule -> backend lowering."""
 
     def __init__(self, schema: DatabaseSchema,
                  edges: Optional[Sequence[Tuple[str, str]]] = None,
@@ -122,8 +140,13 @@ class Engine:
             self.tree = JoinTree.build(schema, self.sizes)
 
     def compile(self, queries: Sequence[Query], *, multi_root: bool = True,
-                block_size: int = 4096,
+                block_size: int = 4096, backend: str = "xla",
+                interpret: Optional[bool] = None, fuse_scans: bool = True,
                 root_override: Optional[Dict[str, str]] = None) -> CompiledBatch:
+        """Compile a query batch.  ``backend`` selects the lowering path
+        (``"xla"``: blocked lax.scan; ``"pallas"``: MXU kernels, with
+        ``interpret`` controlling CPU interpret mode — None auto-detects);
+        ``fuse_scans`` toggles the scheduler's shared-scan fusion."""
         if root_override is not None:
             roots = dict(root_override)
         elif multi_root:
@@ -132,5 +155,6 @@ class Engine:
             roots = roots_mod.single_root(self.tree, queries, self.sizes)
         result = push_down(self.tree, queries, roots)
         groups = group_views(result)
-        cfg = PlanConfig(block_size=block_size)
+        cfg = PlanConfig(block_size=block_size, backend=backend,
+                         interpret=interpret, fuse_scans=fuse_scans)
         return CompiledBatch(self.schema, self.tree, result, groups, cfg, roots)

@@ -1,0 +1,26 @@
+"""Pluggable lowering backends for the aggregate engine (DESIGN.md §5).
+
+A backend lowers one scheduler :class:`~repro.core.ir.StepProgram` — a fused
+multi-output scan over one relation — to device code and writes the finished
+view arrays.  ``xla`` (default) traces a blocked ``lax.scan``; ``pallas``
+routes the reductions through the hand-written MXU kernels in
+``repro.kernels`` (interpret mode on CPU).  Select via
+``PlanConfig.backend`` / ``Engine.compile(backend=...)``.
+"""
+
+from __future__ import annotations
+
+BACKENDS = ("xla", "pallas")
+
+
+def get_backend(name: str):
+    """Instantiate a lowering backend by name (imports lazily so the Pallas
+    dependency chain only loads when requested)."""
+    if name == "xla":
+        from repro.core.lowering.xla import XlaBackend
+        return XlaBackend()
+    if name == "pallas":
+        from repro.core.lowering.pallas import PallasBackend
+        return PallasBackend()
+    raise ValueError(f"unknown lowering backend {name!r}; "
+                     f"available: {', '.join(BACKENDS)}")

@@ -1,0 +1,119 @@
+"""Backend-shared lowering primitives over the group-program IR.
+
+Payload construction — gathers of incoming views, term evaluation in the
+product's axis frame, marginalization of extra axes, validity masking — is
+identical across backends; only the scan strategy and the reduction differ
+(``xla.py``: blocked ``lax.scan`` + ``segment_sum``; ``pallas.py``:
+whole-relation payloads + MXU one-hot kernels).  Everything here is shape
+polymorphic in the leading row axis: ``B`` is a block for the XLA backend and
+the whole padded relation for the Pallas backend.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Mapping, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.aggregates import Params
+from repro.core.ir import (ColProgram, GatherSpec, ProductProgram,
+                           SegmentSpec, ViewProgram)
+
+Cols = Mapping[str, jnp.ndarray]
+
+
+def align(x: jnp.ndarray, src_axes: Tuple[str, ...],
+          dst_axes: Tuple[str, ...]) -> jnp.ndarray:
+    """Map (B, *src_dims) onto (B, *dst positions) with singleton axes
+    elsewhere.  All src axes must appear in dst."""
+    present = [a for a in dst_axes if a in src_axes]
+    if tuple(present) != tuple(src_axes):
+        perm = [0] + [1 + src_axes.index(a) for a in present]
+        x = jnp.transpose(x, perm)
+    shape = [x.shape[0]] + [x.shape[1 + present.index(a)] if a in present else 1
+                            for a in dst_axes]
+    return x.reshape(shape)
+
+
+def reshape_axes(col: jnp.ndarray, dst_axes: Tuple[str, ...]) -> jnp.ndarray:
+    """Row vector -> (B, 1, ..., 1) in the destination axis frame."""
+    return col.reshape((col.shape[0],) + (1,) * len(dst_axes))
+
+
+def segment_ids(cols: Cols, seg: SegmentSpec) -> jnp.ndarray:
+    """Mixed-radix flattening of the local group-by columns."""
+    out = jnp.zeros_like(cols[seg.attrs[0]])
+    for a, d in zip(seg.attrs, seg.dims):
+        out = out * d + cols[a]
+    return out
+
+
+def gather_children(gathers: Tuple[GatherSpec, ...], cols: Cols,
+                    arrays: Mapping[int, jnp.ndarray],
+                    n_rows: int) -> Dict[int, jnp.ndarray]:
+    """Per child view: the (B, *rest_dims) slice each row sees — the paper's
+    'lookup into incoming views', shared by all aggregates of the step."""
+    out: Dict[int, jnp.ndarray] = {}
+    for gs in gathers:
+        idx = tuple(cols[a] for a in gs.gather)
+        out[gs.vid] = arrays[gs.vid][idx] if idx else (
+            jnp.broadcast_to(arrays[gs.vid], (n_rows,) + arrays[gs.vid].shape))
+    return out
+
+
+def product_payload(pp: ProductProgram, cols: Cols,
+                    gathered: Mapping[int, jnp.ndarray], params: Params,
+                    n_rows: int) -> jnp.ndarray:
+    """(B, *kept_axis_dims) contribution of one product, extra axes summed."""
+    acc = None
+    for ref in pp.child_refs:
+        x = gathered[ref.vid][..., ref.col]        # (B, *rest_dims)
+        x = align(x, ref.rest, pp.axes)
+        acc = x if acc is None else acc * x
+    for ta in pp.local_terms:
+        env = {}
+        for a in ta.col_attrs:
+            env[a] = reshape_axes(cols[a], pp.axes)
+        for a, d in zip(ta.dom_attrs, ta.dom_dims):
+            dom = jnp.arange(d, dtype=jnp.int32)
+            env[a] = align(dom[None, :], (a,), pp.axes)
+        x = ta.term.evaluate(env, params)
+        x = jnp.asarray(x, dtype=jnp.float32)
+        if x.ndim == 0:
+            x = jnp.broadcast_to(x, (n_rows,) + (1,) * len(pp.axes))
+        acc = x if acc is None else acc * x
+    if acc is None:  # pure count: Π over empty set = 1
+        acc = jnp.ones((n_rows,) + (1,) * len(pp.axes), dtype=jnp.float32)
+    if len(pp.axes) > pp.n_keep:  # marginalize the non-output axes
+        full = (n_rows,) + pp.axis_dims
+        acc = jnp.broadcast_to(acc, full)
+        acc = acc.sum(axis=tuple(range(1 + pp.n_keep, 1 + len(pp.axes))))
+    return acc
+
+
+def col_payload(cp: ColProgram, cols: Cols,
+                gathered: Mapping[int, jnp.ndarray], params: Params,
+                n_rows: int) -> jnp.ndarray:
+    out = None
+    for pp in cp.products:
+        p = product_payload(pp, cols, gathered, params, n_rows)
+        out = p if out is None else out + p
+    return out
+
+
+def view_payload(vp: ViewProgram, cols: Cols,
+                 gathered: Mapping[int, jnp.ndarray], params: Params,
+                 valid: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    """(B, *pulled_dims, n_aggs) contributions of a row block to view vp."""
+    out_cols = [col_payload(cp, cols, gathered, params, n_rows)
+                * reshape_axes(valid, vp.pulled)
+                for cp in vp.cols]
+    target = (n_rows,) + vp.pulled_dims
+    out_cols = [jnp.broadcast_to(c, target) for c in out_cols]
+    return jnp.stack(out_cols, axis=-1)
+
+
+def finalize(vp: ViewProgram, acc: jnp.ndarray) -> jnp.ndarray:
+    """Unflatten the segment axis and transpose to canonical group-by order."""
+    arr = acc.reshape(vp.out_dims + (vp.n_aggs,))
+    return jnp.transpose(arr, vp.out_perm)

@@ -1,0 +1,143 @@
+"""Pallas lowering backend: segment reductions on the MXU kernels.
+
+Rows stream through ``lax.scan`` in ``PlanConfig.block_size`` blocks (same
+bounded-memory structure as the XLA backend — payloads never materialize
+beyond one block), but each block's reduction runs through the
+``kernels/seg_aggregate`` one-hot-matmul kernel — the TPU-native form of the
+multi-output trie scan, with the dense view accumulator pinned in VMEM
+across the kernel's row grid.  Views of a fused step that share the same
+local group-by key are *concatenated into one kernel launch* (one scatter
+pass computes all their aggregate columns — the MOO promise at kernel
+granularity); views matching the decision-tree histogram pattern route
+through the fused ``kernels/tree_hist`` kernel instead.
+
+On CPU the kernels run in interpret mode (``PlanConfig.interpret``;
+``None`` auto-selects interpret off-TPU), which keeps this backend testable
+everywhere and allclose to the XLA backend up to fp32 reduction order.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregates import Params
+from repro.core.ir import StepProgram, ViewProgram
+from repro.core.lowering import common
+from repro.core.lowering.xla import _ceil_to
+
+
+def _resolve_interpret(config) -> bool:
+    if config.interpret is not None:
+        return bool(config.interpret)
+    return jax.default_backend() != "tpu"
+
+
+class PallasBackend:
+    """Lowers one scan step to blocked Pallas kernel launches."""
+
+    name = "pallas"
+
+    # kernel row-grid block: independent of PlanConfig.block_size (which
+    # sizes the outer lax.scan blocks); the ops wrappers pad to a multiple
+    block_rows = 512
+
+    def run_step(self, prog: StepProgram, rel_cols: Mapping[str, jnp.ndarray],
+                 arrays: Dict[int, jnp.ndarray], params: Params, *,
+                 n_valid: int, offset, config) -> None:
+        from repro.kernels import ops
+
+        interpret = _resolve_interpret(config)
+        n_pad = int(next(iter(rel_cols.values())).shape[0])
+        B = min(config.block_size, max(n_pad, 1))
+        n_blocks = max(_ceil_to(n_pad, B) // B, 1)
+        total = n_blocks * B
+        cols_blocked = {}
+        for a, c in rel_cols.items():
+            pad = total - n_pad
+            cp = jnp.pad(c, (0, pad)) if pad else c
+            cols_blocked[a] = cp.reshape(n_blocks, B)
+        iota = jnp.arange(n_blocks, dtype=jnp.int32)
+
+        # static split: hist-pattern views, then general views bucketed by
+        # their local segment key so one seg_aggregate launch per block
+        # reduces every aggregate column keyed the same way
+        hist_views = [vp for vp in prog.views if vp.hist is not None]
+        bucket_map: Dict[Tuple[str, ...], List[ViewProgram]] = {}
+        for vp in prog.views:
+            if vp.hist is None:
+                key = vp.seg.attrs if vp.seg is not None else ()
+                bucket_map.setdefault(key, []).append(vp)
+        buckets = sorted(bucket_map.items())
+
+        def flat_width(vp: ViewProgram) -> int:
+            w = vp.n_aggs
+            for d in vp.pulled_dims:
+                w *= d
+            return w
+
+        hist_accs = tuple(jnp.zeros((vp.hist.n_buckets, 3), jnp.float32)
+                          for vp in hist_views)
+        bucket_accs = tuple(
+            jnp.zeros((vps[0].seg.n_segments if key else 1,
+                       sum(flat_width(vp) for vp in vps)), jnp.float32)
+            for key, vps in buckets)
+
+        def body(carry, xs):
+            hist_accs, bucket_accs = carry
+            blk_cols, blk_i = xs
+            row_idx = blk_i * B + jnp.arange(B, dtype=jnp.int32)
+            limit = jnp.minimum(jnp.asarray(n_pad, jnp.int32),
+                                jnp.asarray(n_valid, jnp.int32)
+                                - jnp.asarray(offset, jnp.int32))
+            valid = (row_idx < limit).astype(jnp.float32)
+
+            gathered = common.gather_children(prog.gathers, blk_cols, arrays, B)
+
+            new_hist = []
+            for vp, acc in zip(hist_views, hist_accs):
+                cond = common.col_payload(vp.hist.cond, blk_cols, gathered,
+                                          params, B) * valid
+                out = ops.tree_hist(blk_cols[vp.hist.code_attr],
+                                    blk_cols[vp.hist.y_attr].astype(jnp.float32),
+                                    cond, vp.hist.n_buckets,
+                                    block_rows=self.block_rows,
+                                    interpret=interpret)
+                new_hist.append(acc + out)
+
+            new_buckets = []
+            for (key, vps), acc in zip(buckets, bucket_accs):
+                payload = jnp.concatenate(
+                    [common.view_payload(vp, blk_cols, gathered, params,
+                                         valid, B).reshape(B, -1)
+                     for vp in vps], axis=1)
+                if key:
+                    seg = common.segment_ids(blk_cols, vps[0].seg)
+                    n_seg = vps[0].seg.n_segments
+                else:
+                    seg = jnp.zeros((B,), dtype=jnp.int32)
+                    n_seg = 1
+                out = ops.seg_aggregate(seg, payload, n_seg,
+                                        block_rows=self.block_rows,
+                                        interpret=interpret)
+                new_buckets.append(acc + out)
+            return (tuple(new_hist), tuple(new_buckets)), None
+
+        (hist_accs, bucket_accs), _ = jax.lax.scan(
+            body, (hist_accs, bucket_accs), (cols_blocked, iota))
+
+        for vp, acc in zip(hist_views, hist_accs):
+            arrays[vp.vid] = common.finalize(vp, acc)
+        for (key, vps), out in zip(buckets, bucket_accs):
+            o = 0
+            for vp in vps:
+                w = flat_width(vp)
+                n_seg = vp.seg.n_segments if vp.seg is not None else 1
+                acc = out[:, o:o + w].reshape((n_seg,) + vp.pulled_dims
+                                              + (vp.n_aggs,))
+                if vp.seg is None:
+                    acc = acc[0]
+                arrays[vp.vid] = common.finalize(vp, acc)
+                o += w

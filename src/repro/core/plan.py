@@ -1,22 +1,17 @@
-"""Multi-Output Optimization + execution (paper Fig. 1 layers 6–8).
+"""Executable plan: IR build -> shared-scan schedule -> backend lowering.
 
-Each view group becomes one *multi-output plan*: a single blocked scan over the
-group's relation that computes every outgoing view at once.  The scan is the
-TPU-native analogue of LMFAO's trie-ordered nested-loop pass:
+The paper's bottom layers (Fig. 1 layers 6–8) as three separable stages:
 
-  * the relation's rows stream through ``lax.scan`` in fixed-size blocks
-    (HBM→VMEM tiles on real hardware);
-  * incoming views are **dense tensors** gathered once per block per view —
-    the "lookup into incoming views" — and shared by all aggregates in the
-    group (the paper's shared scan);
-  * group-by attributes local to the relation become segment ids
-    (``segment_sum`` = the trie's grouped visit); attributes pulled up from
-    child views are dense axes, so products across subtrees are broadcast
-    outer products lowered onto the MXU;
-  * the whole plan is traced and ``jax.jit``-compiled — tracing *is* LMFAO's
-    code-generation layer (DESIGN.md §2): the emitted HLO is specialized to
-    the schema, the view group, and the aggregate batch, with XLA performing
-    the constant/common-subexpression work of the paper's generated C++.
+  * ``ir.py`` compiles each view group into a typed :class:`GroupProgram`
+    (gather specs, product axis frames, segment layouts, output perms) —
+    built once here, never re-derived per call;
+  * ``schedule.py`` fuses same-relation, dependency-independent groups into
+    single shared scans and fixes execution order;
+  * ``lowering/`` turns each fused step into device code: the ``xla``
+    backend traces a blocked ``lax.scan`` (tracing *is* LMFAO's code
+    generation, DESIGN.md §2 — the emitted HLO is specialized to the schema,
+    the fused view set, and the aggregate batch), the ``pallas`` backend
+    launches the MXU kernels in ``repro.kernels``.
 
 Dynamic UDAF parameters (decision-tree thresholds) arrive through ``params``
 as traced arrays — no recompilation between CART iterations.
@@ -25,17 +20,19 @@ as traced arrays — no recompilation between CART iterations.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregates import Params, Term
+from repro.core.aggregates import Params
 from repro.core.groups import ViewGroup
+from repro.core.ir import StepProgram, build_programs, fuse_programs
 from repro.core.jointree import JoinTree
-from repro.core.pushdown import AggColSpec, ColRef, PushdownResult, ViewDef
+from repro.core.lowering import get_backend
+from repro.core.pushdown import PushdownResult
+from repro.core.schedule import Schedule, build_schedule
 from repro.core.schema import DatabaseSchema
 
 Columns = Mapping[str, Mapping[str, jnp.ndarray]]  # rel -> attr -> (n,)
@@ -47,12 +44,16 @@ def _ceil_to(n: int, m: int) -> int:
 
 @dataclasses.dataclass
 class PlanConfig:
-    block_size: int = 4096
-    interpret_kernels: bool = False  # route hot inner ops through Pallas (interpret on CPU)
+    block_size: int = 4096          # lax.scan row-block (xla backend)
+    backend: str = "xla"            # lowering backend: "xla" | "pallas"
+    interpret: Optional[bool] = None  # Pallas interpret mode; None = auto
+                                      # (True everywhere except real TPU)
+    fuse_scans: bool = True         # shared-scan fusion across view groups
 
 
 class ExecutablePlan:
-    """Executes a pushed-down, merged, grouped aggregate batch."""
+    """Executes a pushed-down, merged, grouped aggregate batch by driving the
+    scheduler's fused scan steps through the configured lowering backend."""
 
     def __init__(self, schema: DatabaseSchema, tree: JoinTree, result: PushdownResult,
                  groups: Sequence[ViewGroup], config: Optional[PlanConfig] = None):
@@ -62,7 +63,13 @@ class ExecutablePlan:
         self.views = result.views
         self.groups = list(groups)
         self.config = config or PlanConfig()
-        self._n_rows: Dict[str, int] = {}
+        self.programs = build_programs(schema, result.views, self.groups)
+        self.schedule: Schedule = build_schedule(self.groups,
+                                                 fuse=self.config.fuse_scans)
+        self.step_programs: List[StepProgram] = [
+            fuse_programs([self.programs[gid] for gid in step.gids])
+            for step in self.schedule.steps]
+        self.backend = get_backend(self.config.backend)
 
     # ------------------------------------------------------------------ api
 
@@ -71,19 +78,24 @@ class ExecutablePlan:
         caller jits it.  ``n_rows`` are the *valid* row counts (columns may be
         padded beyond them); ``offsets`` shift validity windows for sharded
         execution (see distributed.py)."""
-        self._n_rows = dict(n_rows)
+        # the closure must capture its own copy: a retrace of a cached runner
+        # would otherwise read row counts from whichever bind() ran last
+        n_rows = dict(n_rows)
 
         def run(columns: Columns, params: Params, offsets: Optional[Mapping[str, jnp.ndarray]] = None,
                 psum_axes: Optional[Mapping[str, str]] = None):
             offsets = offsets or {}
             psum_axes = psum_axes or {}
             arrays: Dict[int, jnp.ndarray] = {}
-            for g in self.groups:
-                self._run_group(g, columns[g.rel], arrays, params,
-                                offsets.get(g.rel, 0))
-                if g.rel in psum_axes:
-                    for vid in g.vids:
-                        arrays[vid] = jax.lax.psum(arrays[vid], psum_axes[g.rel])
+            for step, prog in zip(self.schedule.steps, self.step_programs):
+                self.backend.run_step(
+                    prog, columns[step.rel], arrays, params,
+                    n_valid=n_rows[step.rel],
+                    offset=offsets.get(step.rel, 0), config=self.config)
+                if step.rel in psum_axes:
+                    for vid in step.vids:
+                        arrays[vid] = jax.lax.psum(arrays[vid],
+                                                   psum_axes[step.rel])
             out = {}
             for qname, qo in self.result.outputs.items():
                 arr = arrays[qo.vid]
@@ -95,181 +107,6 @@ class ExecutablePlan:
             return out
 
         return run
-
-    # ------------------------------------------------------------- internals
-
-    def _rel_attrs(self, rel: str) -> frozenset:
-        return self.schema.relation(rel).attr_set
-
-    def _dom(self, attr: str) -> int:
-        return self.schema.domain(attr)
-
-    def _run_group(self, g: ViewGroup, rel_cols: Mapping[str, jnp.ndarray],
-                   arrays: Dict[int, jnp.ndarray], params: Params, offset) -> None:
-        n_valid = self._n_rows[g.rel]
-        n_pad = int(next(iter(rel_cols.values())).shape[0])
-        B = min(self.config.block_size, max(n_pad, 1))
-        n_blocks = max(_ceil_to(n_pad, B) // B, 1)
-
-        rel_attr_set = self._rel_attrs(g.rel)
-        out_views = [self.views[vid] for vid in g.vids]
-
-        # --- static prep per view -----------------------------------------
-        # child views referenced by this group, with their gather attrs
-        child_vids = sorted({ref.vid
-                             for w in out_views
-                             for col in w.agg_cols
-                             for prod in col.products
-                             for ref in prod.child_cols})
-        child_gather: Dict[int, Tuple[Tuple[str, ...], Tuple[str, ...]]] = {}
-        for vid in child_vids:
-            v = self.views[vid]
-            gat = tuple(a for a in v.group_by if a in rel_attr_set)
-            rest = tuple(a for a in v.group_by if a not in rel_attr_set)
-            # gather attrs must form the axis prefix of the child array
-            if v.group_by[:len(gat)] != gat:
-                raise AssertionError(f"view {vid}: gather attrs not a prefix: "
-                                     f"{v.group_by} vs {gat}")
-            child_gather[vid] = (gat, rest)
-
-        specs = []
-        for w in out_views:
-            local = tuple(a for a in w.group_by if a in rel_attr_set)
-            pulled_out = tuple(a for a in w.group_by if a not in rel_attr_set)
-            specs.append((w, local, pulled_out))
-
-        # --- pad + block the relation --------------------------------------
-        total = n_blocks * B
-        cols_blocked = {}
-        for a, c in rel_cols.items():
-            pad = total - n_pad
-            cp = jnp.pad(c, (0, pad)) if pad else c
-            cols_blocked[a] = cp.reshape(n_blocks, B)
-        iota = jnp.arange(n_blocks, dtype=jnp.int32)
-
-        # --- accumulators ---------------------------------------------------
-        accs = []
-        for w, local, pulled_out in specs:
-            n_local = int(np.prod([self._dom(a) for a in local], dtype=np.int64)) if local else 0
-            shape = ([n_local] if local else []) + [self._dom(a) for a in pulled_out] + [w.n_aggs]
-            accs.append(jnp.zeros(shape, dtype=jnp.float32))
-
-        def body(carry, xs):
-            accs = carry
-            blk_cols, blk_i = xs
-            # local row index within this shard's (possibly padded) partition;
-            # valid iff inside both the local partition and the global window
-            row_idx = blk_i * B + jnp.arange(B, dtype=jnp.int32)
-            limit = jnp.minimum(jnp.asarray(n_pad, jnp.int32),
-                                jnp.asarray(n_valid, jnp.int32) - jnp.asarray(offset, jnp.int32))
-            valid = (row_idx < limit).astype(jnp.float32)
-
-            gathered: Dict[int, jnp.ndarray] = {}
-            for vid in child_vids:
-                gat, _rest = child_gather[vid]
-                idx = tuple(blk_cols[a] for a in gat)
-                gathered[vid] = arrays[vid][idx] if idx else (
-                    jnp.broadcast_to(arrays[vid], (B,) + arrays[vid].shape))
-
-            new_accs = []
-            for (w, local, pulled_out), acc in zip(specs, accs):
-                payload = self._view_payload(w, pulled_out, blk_cols, gathered,
-                                             child_gather, params, valid, B)
-                if local:
-                    seg = self._segment_ids(blk_cols, local)
-                    n_local = acc.shape[0]
-                    contrib = jax.ops.segment_sum(payload, seg, num_segments=n_local)
-                else:
-                    contrib = payload.sum(axis=0)
-                new_accs.append(acc + contrib)
-            return tuple(new_accs), None
-
-        accs, _ = jax.lax.scan(body, tuple(accs), (cols_blocked, iota))
-
-        # --- finalize shapes -------------------------------------------------
-        for (w, local, pulled_out), acc in zip(specs, accs):
-            dims = [self._dom(a) for a in local] + [self._dom(a) for a in pulled_out]
-            arr = acc.reshape(dims + [w.n_aggs])
-            computed_order = list(local) + list(pulled_out)
-            perm = [computed_order.index(a) for a in w.group_by] + [len(computed_order)]
-            arrays[w.vid] = jnp.transpose(arr, perm)
-
-    def _segment_ids(self, blk_cols, local: Tuple[str, ...]) -> jnp.ndarray:
-        seg = jnp.zeros_like(blk_cols[local[0]])
-        for a in local:
-            seg = seg * self._dom(a) + blk_cols[a]
-        return seg
-
-    def _view_payload(self, w: ViewDef, pulled_out: Tuple[str, ...], blk_cols,
-                      gathered, child_gather, params: Params, valid, B: int) -> jnp.ndarray:
-        """(B, *pulled_out_dims, n_aggs) contributions of one row block to view w."""
-        out_cols = []
-        for colspec in w.agg_cols:
-            col = None
-            for prod in colspec.products:
-                p = self._product_payload(w, prod, pulled_out, blk_cols, gathered,
-                                          child_gather, params, B)
-                col = p if col is None else col + p
-            out_cols.append(col * self._reshape_axes(valid, (), tuple(pulled_out), B))
-        target = (B,) + tuple(self._dom(a) for a in pulled_out)
-        out_cols = [jnp.broadcast_to(c, target) for c in out_cols]
-        return jnp.stack(out_cols, axis=-1)
-
-    def _product_payload(self, w: ViewDef, prod, pulled_out: Tuple[str, ...], blk_cols,
-                         gathered, child_gather, params: Params, B: int) -> jnp.ndarray:
-        rel_attr_set = self._rel_attrs(w.rel)
-        used = set()
-        for ref in prod.child_cols:
-            used |= set(child_gather[ref.vid][1])
-        for t in prod.local_terms:
-            used |= {a for a in t.attrs() if a not in rel_attr_set}
-        # compute axes: output pulled dims first (kept), extra used dims after (summed)
-        extra = tuple(sorted(used - set(pulled_out)))
-        axes = tuple(pulled_out) + extra
-
-        acc = None
-        for ref in prod.child_cols:
-            _gat, rest = child_gather[ref.vid]
-            x = gathered[ref.vid][..., ref.col]  # (B, *rest_dims)
-            x = self._align(x, rest, axes, B)
-            acc = x if acc is None else acc * x
-        for t in prod.local_terms:
-            env = {}
-            for a in t.attrs():
-                if a in rel_attr_set:
-                    env[a] = self._reshape_axes(blk_cols[a], (), axes, B)
-                else:
-                    dom = jnp.arange(self._dom(a), dtype=jnp.int32)
-                    env[a] = self._align(dom[None, :], (a,), axes, B, broadcast_rows=True)
-            x = t.evaluate(env, params)
-            x = jnp.asarray(x, dtype=jnp.float32)
-            if x.ndim == 0:
-                x = jnp.broadcast_to(x, (B,) + (1,) * len(axes))
-            acc = x if acc is None else acc * x
-        if acc is None:  # pure count: Π over empty set = 1
-            acc = jnp.ones((B,) + (1,) * len(axes), dtype=jnp.float32)
-        # marginalize the non-output axes
-        if extra:
-            full = (B,) + tuple(self._dom(a) for a in axes)
-            acc = jnp.broadcast_to(acc, full)
-            acc = acc.sum(axis=tuple(range(1 + len(pulled_out), 1 + len(axes))))
-        return acc
-
-    def _align(self, x: jnp.ndarray, src_axes: Tuple[str, ...], dst_axes: Tuple[str, ...],
-               B: int, broadcast_rows: bool = False) -> jnp.ndarray:
-        """Map (B, *src_dims) onto (B, *dst positions) with singleton axes
-        elsewhere.  All src axes must appear in dst."""
-        present = [a for a in dst_axes if a in src_axes]
-        if tuple(present) != tuple(src_axes):
-            perm = [0] + [1 + src_axes.index(a) for a in present]
-            x = jnp.transpose(x, perm)
-        shape = [x.shape[0]] + [x.shape[1 + present.index(a)] if a in present else 1
-                                for a in dst_axes]
-        return x.reshape(shape)
-
-    def _reshape_axes(self, col: jnp.ndarray, src: Tuple[str, ...],
-                      dst_axes: Tuple[str, ...], B: int) -> jnp.ndarray:
-        return col.reshape((B,) + (1,) * len(dst_axes))
 
 
 # ---------------------------------------------------------------------------

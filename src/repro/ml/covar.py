@@ -120,11 +120,13 @@ def assemble_covar(outputs: Dict[str, np.ndarray], layout: CovarLayout) -> Tuple
 def compute_covar(ds: Dataset, engine: Optional[Engine] = None,
                   cont: Optional[Sequence[str]] = None,
                   cat: Optional[Sequence[str]] = None,
-                  multi_root: bool = True, block_size: int = 4096):
+                  multi_root: bool = True, block_size: int = 4096,
+                  backend: str = "xla", interpret: Optional[bool] = None):
     """End-to-end: build batch, run engine, assemble dense covar."""
     qs, layout = covar_queries(ds, cont, cat)
     eng = engine or Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
-    batch = eng.compile(qs, multi_root=multi_root, block_size=block_size)
+    batch = eng.compile(qs, multi_root=multi_root, block_size=block_size,
+                        backend=backend, interpret=interpret)
     outputs = batch(ds.db)
     C, N = assemble_covar({k: np.asarray(v) for k, v in outputs.items()}, layout)
     return C, N, layout, batch

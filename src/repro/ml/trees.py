@@ -63,7 +63,8 @@ class DecisionTree:
                  split_attrs: Optional[Sequence[str]] = None,
                  max_depth: int = 4, min_instances: int = 1000,
                  max_nodes: int = 31, block_size: int = 4096,
-                 multi_root: bool = True):
+                 multi_root: bool = True, backend: str = "xla",
+                 interpret: Optional[bool] = None):
         self.ds = ds
         self.task = task
         self.label = label or (ds.label if task == "regression" else None)
@@ -87,12 +88,14 @@ class DecisionTree:
         else:
             self.n_classes = 0
 
-        self._build_batch(block_size, multi_root)
+        self._build_batch(block_size, multi_root, backend, interpret)
         self.nodes: List[TreeNode] = []
 
     # -- the aggregate batch (compiled once for the whole tree) --------------
 
-    def _build_batch(self, block_size: int, multi_root: bool) -> None:
+    def _build_batch(self, block_size: int, multi_root: bool,
+                     backend: str = "xla",
+                     interpret: Optional[bool] = None) -> None:
         cond = [_mask_term(f.attr) for f in self.features]
         queries = []
         for f in self.features:
@@ -104,7 +107,9 @@ class DecisionTree:
                                        for c in range(self.n_classes)]
             queries.append(query(f"split_{f.attr}", [f.attr], aggs))
         eng = Engine(self.ds.schema, edges=self.ds.edges, sizes=self.ds.db.sizes())
-        self.batch = eng.compile(queries, multi_root=multi_root, block_size=block_size)
+        self.batch = eng.compile(queries, multi_root=multi_root,
+                                 block_size=block_size, backend=backend,
+                                 interpret=interpret)
         self.n_aggregates = sum(len(q.aggregates) * self.ds.schema.domain(q.group_by[0])
                                 for q in queries)
 

@@ -8,6 +8,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # end-to-end train/restart loops
+
 from repro import configs
 from repro.checkpoint import store
 from repro.data.pipeline import PipelineConfig, TokenPipeline

@@ -113,6 +113,7 @@ def test_cubes_engine_equals_rollup(fav):
     np.testing.assert_allclose(a[cubes.cube_name(dims)], fin, rtol=1e-4, atol=1e-2)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ["retailer", "yelp", "tpcds"])
 def test_covar_other_schemas(name):
     ds = D.make(name, scale=0.03)

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # per-arch training/decode smokes: minutes-scale
+
 from repro import configs
 from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.models import model as M
