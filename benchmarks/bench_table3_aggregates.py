@@ -94,7 +94,7 @@ def bench(dataset_name: str):
 
     # -- regression-tree node ---------------------------------------------------
     dt = trees.DecisionTree(ds, task="regression", max_depth=1, min_instances=10,
-                            max_nodes=1)
+                            max_nodes=1, node_batch=False)
     params = dt._node_params({f.attr: np.ones(f.domain, np.float32)
                               for f in dt.features})
     t = timeit(lambda: dt.batch(ds.db, params=params))

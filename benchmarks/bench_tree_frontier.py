@@ -1,0 +1,90 @@
+"""Frontier-batched vs per-node decision-tree building (DESIGN.md §7.4).
+
+The per-node loop issues one engine dispatch per tree node (plus a host sync
+between nodes); frontier batching evaluates an entire tree level in ONE
+fused dispatch via the param-batch (node) axis, so dispatches grow with
+*depth*, not node count.  Reports wall time, total device dispatches, and
+dispatches/node for both strategies, plus the forest workloads that only
+exist because of the axis.
+
+    PYTHONPATH=src python -m benchmarks.bench_tree_frontier
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import BENCH_SCALE, row
+from repro.data import datasets as D
+from repro.ml.forest import GradientBoostedTrees, RandomForest
+from repro.ml.trees import DecisionTree
+
+
+def fit_tree(ds, node_batch: bool, depth: int):
+    """Returns (tree, cold seconds, warm median seconds, dispatches/fit).
+
+    Cold includes jit trace+compile of every frontier size; warm re-fits
+    against the hot ``CompiledBatch._jitted`` cache — the steady-state cost
+    of the evaluation strategy itself (compilation amortizes over the many
+    trees of a forest / boosting run, exactly like LMFAO's compiled C++)."""
+    dt = DecisionTree(ds, task="regression", max_depth=depth,
+                      min_instances=20, max_nodes=2 ** (depth + 1) - 1,
+                      node_batch=node_batch)
+    t0 = time.perf_counter()
+    dt.fit()
+    cold = time.perf_counter() - t0
+    d0 = dt.batch.n_dispatches
+    warm = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        dt.fit()
+        warm.append(time.perf_counter() - t0)
+    disp = (dt.batch.n_dispatches - d0) // 3
+    return dt, cold, sorted(warm)[1], disp
+
+
+def main():
+    ds = D.make("favorita", scale=BENCH_SCALE)
+    lines = []
+    for depth in (2, 4, 5):
+        per_node, cold_pn, warm_pn, disp_pn = fit_tree(ds, False, depth)
+        frontier, cold_fr, warm_fr, disp_fr = fit_tree(ds, True, depth)
+        n_nodes = len(frontier.nodes)
+        assert n_nodes == len(per_node.nodes), "strategies must agree"
+        lines.append(row(
+            f"tree/d{depth}/per_node", warm_pn,
+            f"nodes={n_nodes};dispatches={disp_pn};"
+            f"disp_per_node={disp_pn / n_nodes:.2f};cold_s={cold_pn:.2f}"))
+        lines.append(row(
+            f"tree/d{depth}/frontier", warm_fr,
+            f"nodes={n_nodes};dispatches={disp_fr};"
+            f"disp_per_node={disp_fr / n_nodes:.2f};cold_s={cold_fr:.2f};"
+            f"warm_speedup={warm_pn / warm_fr:.2f}x"))
+
+    t0 = time.perf_counter()
+    rf = RandomForest(ds, n_trees=8, max_depth=4, min_instances=20,
+                      max_nodes=31, seed=0).fit()
+    t_rf = time.perf_counter() - t0
+    total = sum(len(t.nodes) for t in rf.trees)
+    lines.append(row(
+        "forest/rf8", t_rf,
+        f"nodes={total};dispatches={rf.batch.n_dispatches};"
+        f"disp_per_node={rf.batch.n_dispatches / total:.2f}"))
+
+    t0 = time.perf_counter()
+    gbt = GradientBoostedTrees(ds, n_rounds=4, learning_rate=0.3,
+                               max_depth=3, min_instances=20).fit()
+    t_g = time.perf_counter() - t0
+    total = sum(len(t) for t in gbt.trees)
+    lines.append(row(
+        "forest/gbt4", t_g,
+        f"nodes={total};dispatches={gbt.batch.n_dispatches};"
+        f"disp_per_node={gbt.batch.n_dispatches / total:.2f}"))
+
+    print("name,us,detail")
+    for ln in lines:
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,14 @@ Dynamic UDAFs (paper §1.2 "dynamic functions", used by decision trees) are
 expressed with :class:`Param` references resolved from a runtime params dict —
 traced by JAX, so changing a threshold never triggers recompilation (DESIGN.md
 §7.3).
+
+A :class:`Param` declared with ``batched=True`` carries a leading *param-batch
+axis* of size ``N`` at run time (DESIGN.md §7.4): one compiled batch then
+evaluates ``N`` parameter settings — e.g. every node of a decision-tree
+frontier — in a single fused device dispatch via
+``CompiledBatch.run_batched``.  Batched terms return arrays with the node
+axis *leading* (before the row axis); payload construction broadcasts
+non-batched factors against it from the right.
 """
 
 from __future__ import annotations
@@ -25,9 +33,15 @@ Params = Mapping[str, jnp.ndarray]
 
 @dataclasses.dataclass(frozen=True)
 class Param:
-    """Reference to a runtime parameter (dynamic UDAF input)."""
+    """Reference to a runtime parameter (dynamic UDAF input).
+
+    ``batched=True`` declares that the runtime value carries a leading
+    param-batch (node) axis of size ``N``; the lowering then threads that
+    axis through payloads and accumulators (DESIGN.md §7.4).
+    """
 
     name: str
+    batched: bool = False
 
 
 def _resolve(v, params: Params):
@@ -45,6 +59,14 @@ class Term:
     def evaluate(self, env: Env, params: Params) -> jnp.ndarray:
         raise NotImplementedError
 
+    def params(self) -> Tuple[Param, ...]:
+        """The runtime :class:`Param` references this term resolves."""
+        return ()
+
+    def is_batched(self) -> bool:
+        """True if any referenced param carries the param-batch axis."""
+        return any(p.batched for p in self.params())
+
     def key(self) -> Tuple:
         """Structural identity for view merging/dedup."""
         raise NotImplementedError
@@ -59,6 +81,9 @@ class Constant(Term):
 
     def evaluate(self, env: Env, params: Params) -> jnp.ndarray:
         return jnp.asarray(_resolve(self.value, params), dtype=jnp.float32)
+
+    def params(self) -> Tuple[Param, ...]:
+        return (self.value,) if isinstance(self.value, Param) else ()
 
     def key(self) -> Tuple:
         return ("const", self.value)
@@ -129,7 +154,16 @@ class Delta(Term):
 
     def evaluate(self, env: Env, params: Params) -> jnp.ndarray:
         t = _resolve(self.threshold, params)
-        return _OPS[self.op](env[self.attr], t).astype(jnp.float32)
+        x = env[self.attr]
+        if isinstance(self.threshold, Param) and self.threshold.batched:
+            # (N,) thresholds -> (N, 1, ..., 1): node axis leads, row/frame
+            # axes of x broadcast from the right
+            t = jnp.asarray(t)
+            t = t.reshape(t.shape + (1,) * x.ndim)
+        return _OPS[self.op](x, t).astype(jnp.float32)
+
+    def params(self) -> Tuple[Param, ...]:
+        return (self.threshold,) if isinstance(self.threshold, Param) else ()
 
     def key(self) -> Tuple:
         return ("delta", self.attr, self.op, self.threshold)
@@ -141,12 +175,16 @@ class Lambda(Term):
 
     ``fn`` receives broadcastable arrays in ``attr_order`` and the params
     dict.  ``tag`` provides structural identity (callables do not hash
-    stably across sessions).
+    stably across sessions).  ``param_refs`` declares which runtime params
+    ``fn`` resolves; if any is ``batched``, ``fn`` must return its result
+    with the node axis leading (e.g. ``jnp.take(params[p], x, axis=-1)``
+    turns an ``(N, D)`` lookup table into an ``(N, *x.shape)`` output).
     """
 
     attr_order: Tuple[str, ...]
     fn: Callable
     tag: str = ""
+    param_refs: Tuple[Param, ...] = ()
 
     def attrs(self) -> FrozenSet[str]:
         return frozenset(self.attr_order)
@@ -154,8 +192,12 @@ class Lambda(Term):
     def evaluate(self, env: Env, params: Params) -> jnp.ndarray:
         return self.fn(*[env[a] for a in self.attr_order], params).astype(jnp.float32)
 
+    def params(self) -> Tuple[Param, ...]:
+        return self.param_refs
+
     def key(self) -> Tuple:
-        return ("lambda", self.attr_order, self.tag or id(self.fn))
+        return ("lambda", self.attr_order, self.tag or id(self.fn),
+                tuple((p.name, p.batched) for p in self.param_refs))
 
 
 @dataclasses.dataclass(frozen=True)

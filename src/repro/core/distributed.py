@@ -42,14 +42,17 @@ def shard_columns(db, mesh: Mesh, axis: str, shard_rel: str):
     return cols, specs
 
 
-def sharded_runner(plan: ExecutablePlan, db, mesh: Mesh, axis: str, shard_rel: str):
-    """Build a jitted shard_map runner. Returns (fn, cols)."""
+def sharded_runner(plan: ExecutablePlan, db, mesh: Mesh, axis: str, shard_rel: str,
+                   n_nodes=None):
+    """Build a jitted shard_map runner. Returns (fn, cols).  ``n_nodes`` is
+    the param-batch (node) axis size for plans with batched params
+    (DESIGN.md §7.4); batched view tensors psum with the node axis intact."""
     from jax.experimental.shard_map import shard_map
 
     ndev = mesh.shape[axis]
     n_rows = db.sizes()
     cols, specs = shard_columns(db, mesh, axis, shard_rel)
-    run = plan.bind(n_rows)
+    run = plan.bind(n_rows, n_nodes=n_nodes)
     rows_per_shard = int(next(iter(cols[shard_rel].values())).shape[0]) // ndev
 
     def local(columns, params):

@@ -63,6 +63,9 @@ class CompiledBatch:
         self.roots = roots
         self.plan = ExecutablePlan(schema, tree, result, groups, config)
         self._jitted = {}
+        #: device dispatches issued (``__call__`` + ``run_batched``); the
+        #: frontier-batched tree builder asserts one per tree level on this
+        self.n_dispatches = 0
 
     @property
     def stats(self) -> BatchStats:
@@ -95,12 +98,71 @@ class CompiledBatch:
             run = self.plan.bind(n_rows)
             self._jitted[key] = jax.jit(lambda cols, p: run(cols, p))
         cols = {name: dict(rel.columns) for name, rel in db.relations.items()}
+        self.n_dispatches += 1
         return self._jitted[key](cols, params)
 
-    def lower(self, db, params: Optional[Params] = None):
-        """Lower without executing (dry-run / HLO inspection)."""
+    # -- param-batched (node frontier) ---------------------------------------
+
+    @property
+    def batched_params(self):
+        """Names of the batch's ``Param(batched=True)`` declarations."""
+        return self.plan.batched_params
+
+    def run_batched(self, db, params: Params, n_nodes: Optional[int] = None,
+                    pad_to_pow2: bool = True) -> Dict[str, jnp.ndarray]:
+        """Evaluate ``N`` parameter settings of the compiled batch in ONE
+        fused device dispatch (DESIGN.md §7.4).
+
+        Every batched param in ``params`` must carry a leading axis of size
+        ``N`` (inferred from the first batched param when ``n_nodes`` is
+        omitted); batched query outputs come back as ``(N, *group_dims,
+        n_aggs)``.  The relation-scan schedule is identical to the N=1 case —
+        one pass over each relation serves all ``N`` nodes.
+
+        ``pad_to_pow2`` (default) rounds the node axis up to the next power
+        of two with zeroed param rows (sliced off the outputs), so a growing
+        tree frontier hits at most ``log2`` distinct jit cache entries
+        instead of one per level."""
         params = dict(params or {})
-        run = self.plan.bind(db.sizes())
+        if not self.plan.batched_params:
+            raise ValueError("batch was compiled without batched params; "
+                             "declare Param(..., batched=True) terms first")
+        if n_nodes is None:
+            name = sorted(self.plan.batched_params)[0]
+            n_nodes = int(jnp.shape(params[name])[0])
+        n_run = n_nodes
+        if pad_to_pow2:
+            n_run = 1
+            while n_run < n_nodes:
+                n_run *= 2
+            if n_run != n_nodes:
+                pad = n_run - n_nodes
+                for name in self.plan.batched_params:
+                    v = jnp.asarray(params[name])
+                    params[name] = jnp.pad(
+                        v, [(0, pad)] + [(0, 0)] * (v.ndim - 1))
+        n_rows = db.sizes()
+        key = ("batched", n_run, tuple(sorted(n_rows.items())),
+               tuple(sorted(params)))
+        if key not in self._jitted:
+            run = self.plan.bind(n_rows, n_nodes=n_run)
+            self._jitted[key] = jax.jit(lambda cols, p: run(cols, p))
+        cols = {name: dict(rel.columns) for name, rel in db.relations.items()}
+        self.n_dispatches += 1
+        out = self._jitted[key](cols, params)
+        if n_run != n_nodes:
+            batched_vids = self.plan.batched_vids
+            out = {q: (v[:n_nodes]
+                       if self.result.outputs[q].vid in batched_vids else v)
+                   for q, v in out.items()}
+        return out
+
+    def lower(self, db, params: Optional[Params] = None,
+              n_nodes: Optional[int] = None):
+        """Lower without executing (dry-run / HLO inspection); pass
+        ``n_nodes`` for plans with batched params."""
+        params = dict(params or {})
+        run = self.plan.bind(db.sizes(), n_nodes=n_nodes)
         cols = {name: {a: jax.ShapeDtypeStruct(c.shape, c.dtype)
                        for a, c in rel.columns.items()}
                 for name, rel in db.relations.items()}
@@ -112,16 +174,26 @@ class CompiledBatch:
 
     def run_sharded(self, db, mesh, axis: str = "data",
                     shard_rel: Optional[str] = None,
-                    params: Optional[Params] = None) -> Dict[str, jnp.ndarray]:
+                    params: Optional[Params] = None,
+                    n_nodes: Optional[int] = None) -> Dict[str, jnp.ndarray]:
         """Partition ``shard_rel`` (default: the largest relation — the
         paper's choice) across the mesh axis; every device runs the
         multi-output plans on its partition; partial dense views are psum'd
-        right after their group (LMFAO's merge of per-thread results)."""
+        right after their group (LMFAO's merge of per-thread results).
+
+        Batched plans shard too: ``n_nodes`` is inferred from the first
+        batched param when omitted, so a node frontier can be evaluated
+        domain-parallel in one collective pass."""
         from repro.core.distributed import sharded_runner
 
         params = dict(params or {})
+        if self.plan.batched_params and n_nodes is None:
+            name = sorted(self.plan.batched_params)[0]
+            n_nodes = int(jnp.shape(params[name])[0])
         shard_rel = shard_rel or max(db.sizes(), key=lambda k: db.sizes()[k])
-        fn, cols = sharded_runner(self.plan, db, mesh, axis, shard_rel)
+        fn, cols = sharded_runner(self.plan, db, mesh, axis, shard_rel,
+                                  n_nodes=n_nodes)
+        self.n_dispatches += 1
         return fn(cols, params)
 
 

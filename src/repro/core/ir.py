@@ -24,13 +24,21 @@ Layout conventions (shared by every backend):
 pattern ``[Σ cond, Σ cond·y, Σ cond·y²]`` grouped by one local attribute —
 the shape the fused ``kernels/tree_hist`` Pallas kernel computes in a single
 VMEM-resident pass (paper Table 3 row 3).
+
+**Param-batch (node) axis** (DESIGN.md §7.4): a term consuming a
+``Param(batched=True)`` makes its :class:`TermApp` *batched*; batchedness
+propagates to the product, to the view, and transitively to every view that
+gathers a batched child (:func:`compute_batched_vids`).  Batched view
+accumulators grow an optional leading node axis of runtime size ``N``
+(``acc_shape`` stays the unbatched shape; backends prepend ``N``), so one
+relation pass serves all ``N`` parameter settings of the compiled batch.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, Mapping, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -44,11 +52,13 @@ from repro.core.schema import DatabaseSchema
 class GatherSpec:
     """How a scan gathers one incoming child view: ``gather`` attrs (local
     columns of the scanned relation) index the child array's axis prefix;
-    ``rest`` are the dense axes the gathered slice keeps."""
+    ``rest`` are the dense axes the gathered slice keeps.  ``batched`` child
+    arrays carry a leading node axis the gather must skip."""
 
     vid: int
     gather: Tuple[str, ...]
     rest: Tuple[str, ...]
+    batched: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,17 +69,20 @@ class ChildColRef:
     vid: int
     col: int
     rest: Tuple[str, ...]
+    batched: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
 class TermApp:
     """A local term application: ``col_attrs`` bind to scanned columns,
-    ``dom_attrs`` bind to domain-iota axes of the product's axis frame."""
+    ``dom_attrs`` bind to domain-iota axes of the product's axis frame.
+    ``batched`` terms resolve a batched param and emit a leading node axis."""
 
     term: Term
     col_attrs: Tuple[str, ...]
     dom_attrs: Tuple[str, ...]
     dom_dims: Tuple[int, ...]
+    batched: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +96,7 @@ class ProductProgram:
     axes: Tuple[str, ...]
     axis_dims: Tuple[int, ...]
     n_keep: int
+    batched: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,10 +140,11 @@ class ViewProgram:
     n_aggs: int
     seg: Optional[SegmentSpec]
     cols: Tuple[ColProgram, ...]
-    acc_shape: Tuple[int, ...]
+    acc_shape: Tuple[int, ...]      # unbatched; batched views prepend (N,)
     out_dims: Tuple[int, ...]
     out_perm: Tuple[int, ...]
     hist: Optional[HistSpec]
+    batched: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,8 +171,41 @@ class StepProgram:
 
 # ---------------------------------------------------------------------- build
 
+def compute_batched_vids(views: Mapping[int, ViewDef]) -> FrozenSet[int]:
+    """Vids whose accumulators carry the param-batch (node) axis: a view is
+    batched iff any of its terms consumes a batched param, or (transitively)
+    it gathers a batched child view.  Fixpoint over the view DAG."""
+    batched: set = set()
+    for vid, w in views.items():
+        for col in w.agg_cols:
+            for prod in col.products:
+                if any(t.is_batched() for t in prod.local_terms):
+                    batched.add(vid)
+    changed = True
+    while changed:
+        changed = False
+        for vid, w in views.items():
+            if vid in batched:
+                continue
+            refs = {ref.vid for col in w.agg_cols for prod in col.products
+                    for ref in prod.child_cols}
+            if refs & batched:
+                batched.add(vid)
+                changed = True
+    return frozenset(batched)
+
+
+def batched_param_names(views: Mapping[int, ViewDef]) -> FrozenSet[str]:
+    """Names of all batched params referenced anywhere in the view DAG —
+    ``run_batched`` reads the node-batch size ``N`` off their leading axis."""
+    return frozenset(p.name for w in views.values() for col in w.agg_cols
+                     for prod in col.products for t in prod.local_terms
+                     for p in t.params() if p.batched)
+
+
 def build_group_program(schema: DatabaseSchema, views: Mapping[int, ViewDef],
-                        group: ViewGroup) -> GroupProgram:
+                        group: ViewGroup,
+                        batched_vids: FrozenSet[int] = frozenset()) -> GroupProgram:
     rel_attrs = schema.relation(group.rel).attr_set
     out_views = [views[vid] for vid in group.vids]
 
@@ -176,10 +224,11 @@ def build_group_program(schema: DatabaseSchema, views: Mapping[int, ViewDef],
         if v.group_by[:len(gat)] != gat:
             raise AssertionError(f"view {vid}: gather attrs not a prefix: "
                                  f"{v.group_by} vs {gat}")
-        gathers.append(GatherSpec(vid, gat, rest))
+        gathers.append(GatherSpec(vid, gat, rest, batched=vid in batched_vids))
         child_rest[vid] = rest
 
-    vps = tuple(_build_view_program(schema, w, rel_attrs, child_rest)
+    vps = tuple(_build_view_program(schema, w, rel_attrs, child_rest,
+                                    batched_vids)
                 for w in out_views)
     return GroupProgram(gid=group.gid, rel=group.rel, views=vps,
                         gathers=tuple(gathers))
@@ -187,7 +236,9 @@ def build_group_program(schema: DatabaseSchema, views: Mapping[int, ViewDef],
 
 def build_programs(schema: DatabaseSchema, views: Mapping[int, ViewDef],
                    groups: Sequence[ViewGroup]) -> Dict[int, GroupProgram]:
-    return {g.gid: build_group_program(schema, views, g) for g in groups}
+    batched_vids = compute_batched_vids(views)
+    return {g.gid: build_group_program(schema, views, g, batched_vids)
+            for g in groups}
 
 
 def fuse_programs(progs: Sequence[GroupProgram]) -> StepProgram:
@@ -207,7 +258,8 @@ def fuse_programs(progs: Sequence[GroupProgram]) -> StepProgram:
 
 def _build_view_program(schema: DatabaseSchema, w: ViewDef,
                         rel_attrs: frozenset,
-                        child_rest: Mapping[int, Tuple[str, ...]]) -> ViewProgram:
+                        child_rest: Mapping[int, Tuple[str, ...]],
+                        batched_vids: FrozenSet[int] = frozenset()) -> ViewProgram:
     local = tuple(a for a in w.group_by if a in rel_attrs)
     pulled = tuple(a for a in w.group_by if a not in rel_attrs)
     pulled_dims = tuple(schema.domain(a) for a in pulled)
@@ -227,7 +279,8 @@ def _build_view_program(schema: DatabaseSchema, w: ViewDef,
             for ref in prod.child_cols:
                 rest = child_rest[ref.vid]
                 used |= set(rest)
-                refs.append(ChildColRef(ref.vid, ref.col, rest))
+                refs.append(ChildColRef(ref.vid, ref.col, rest,
+                                        batched=ref.vid in batched_vids))
             term_apps = []
             for t in prod.local_terms:
                 col_attrs = tuple(sorted(a for a in t.attrs() if a in rel_attrs))
@@ -235,13 +288,16 @@ def _build_view_program(schema: DatabaseSchema, w: ViewDef,
                 used |= set(dom_attrs)
                 term_apps.append(TermApp(
                     t, col_attrs, dom_attrs,
-                    tuple(schema.domain(a) for a in dom_attrs)))
+                    tuple(schema.domain(a) for a in dom_attrs),
+                    batched=t.is_batched()))
             extra = tuple(sorted(used - set(pulled)))
             axes = pulled + extra
             prods.append(ProductProgram(
                 child_refs=tuple(refs), local_terms=tuple(term_apps),
                 axes=axes, axis_dims=tuple(schema.domain(a) for a in axes),
-                n_keep=len(pulled)))
+                n_keep=len(pulled),
+                batched=(any(r.batched for r in refs)
+                         or any(ta.batched for ta in term_apps))))
         cols.append(ColProgram(tuple(prods)))
     cols = tuple(cols)
 
@@ -256,7 +312,8 @@ def _build_view_program(schema: DatabaseSchema, w: ViewDef,
         vid=w.vid, rel=w.rel, group_by=w.group_by, local=local, pulled=pulled,
         pulled_dims=pulled_dims, n_aggs=w.n_aggs, seg=seg, cols=cols,
         acc_shape=acc_shape, out_dims=out_dims, out_perm=out_perm,
-        hist=_detect_hist(schema, rel_attrs, local, pulled, cols))
+        hist=_detect_hist(schema, rel_attrs, local, pulled, cols),
+        batched=w.vid in batched_vids)
 
 
 def _detect_hist(schema: DatabaseSchema, rel_attrs: frozenset,

@@ -7,11 +7,17 @@ identical across backends; only the scan strategy and the reduction differ
 whole-relation payloads + MXU one-hot kernels).  Everything here is shape
 polymorphic in the leading row axis: ``B`` is a block for the XLA backend and
 the whole padded relation for the Pallas backend.
+
+Param-batch (node) axis (DESIGN.md §7.4): batched products/views carry an
+extra *leading* node axis of size ``N`` before the row axis, so arrays are
+``(N, B, *frame)``.  Non-batched factors stay ``(B, *frame)`` and broadcast
+against batched ones from the right; the static ``batched`` flags on the IR
+decide where the axis exists, so every shape is known at trace time.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Mapping, Tuple
+from typing import Dict, Mapping, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -23,15 +29,17 @@ Cols = Mapping[str, jnp.ndarray]
 
 
 def align(x: jnp.ndarray, src_axes: Tuple[str, ...],
-          dst_axes: Tuple[str, ...]) -> jnp.ndarray:
-    """Map (B, *src_dims) onto (B, *dst positions) with singleton axes
-    elsewhere.  All src axes must appear in dst."""
+          dst_axes: Tuple[str, ...], lead: int = 1) -> jnp.ndarray:
+    """Map (*lead, *src_dims) onto (*lead, *dst positions) with singleton axes
+    elsewhere.  All src axes must appear in dst; ``lead`` counts the leading
+    non-frame axes kept in place (row axis, or node+row axes)."""
     present = [a for a in dst_axes if a in src_axes]
     if tuple(present) != tuple(src_axes):
-        perm = [0] + [1 + src_axes.index(a) for a in present]
+        perm = list(range(lead)) + [lead + src_axes.index(a) for a in present]
         x = jnp.transpose(x, perm)
-    shape = [x.shape[0]] + [x.shape[1 + present.index(a)] if a in present else 1
-                            for a in dst_axes]
+    shape = list(x.shape[:lead]) + [
+        x.shape[lead + present.index(a)] if a in present else 1
+        for a in dst_axes]
     return x.reshape(shape)
 
 
@@ -52,23 +60,35 @@ def gather_children(gathers: Tuple[GatherSpec, ...], cols: Cols,
                     arrays: Mapping[int, jnp.ndarray],
                     n_rows: int) -> Dict[int, jnp.ndarray]:
     """Per child view: the (B, *rest_dims) slice each row sees — the paper's
-    'lookup into incoming views', shared by all aggregates of the step."""
+    'lookup into incoming views', shared by all aggregates of the step.
+    Batched children ((N, ...) arrays) gather past their node axis, yielding
+    (N, B, *rest_dims) slices."""
     out: Dict[int, jnp.ndarray] = {}
     for gs in gathers:
         idx = tuple(cols[a] for a in gs.gather)
-        out[gs.vid] = arrays[gs.vid][idx] if idx else (
-            jnp.broadcast_to(arrays[gs.vid], (n_rows,) + arrays[gs.vid].shape))
+        arr = arrays[gs.vid]
+        if gs.batched:
+            if idx:
+                out[gs.vid] = arr[(slice(None),) + idx]
+            else:
+                out[gs.vid] = jnp.broadcast_to(
+                    arr[:, None], arr.shape[:1] + (n_rows,) + arr.shape[1:])
+        else:
+            out[gs.vid] = arr[idx] if idx else (
+                jnp.broadcast_to(arr, (n_rows,) + arr.shape))
     return out
 
 
 def product_payload(pp: ProductProgram, cols: Cols,
                     gathered: Mapping[int, jnp.ndarray], params: Params,
                     n_rows: int) -> jnp.ndarray:
-    """(B, *kept_axis_dims) contribution of one product, extra axes summed."""
+    """(B, *kept_axis_dims) contribution of one product, extra axes summed;
+    (N, B, *kept) when the product is batched."""
+    n_frame = len(pp.axes)
     acc = None
     for ref in pp.child_refs:
-        x = gathered[ref.vid][..., ref.col]        # (B, *rest_dims)
-        x = align(x, ref.rest, pp.axes)
+        x = gathered[ref.vid][..., ref.col]        # (N?, B, *rest_dims)
+        x = align(x, ref.rest, pp.axes, lead=2 if ref.batched else 1)
         acc = x if acc is None else acc * x
     for ta in pp.local_terms:
         env = {}
@@ -79,15 +99,19 @@ def product_payload(pp: ProductProgram, cols: Cols,
             env[a] = align(dom[None, :], (a,), pp.axes)
         x = ta.term.evaluate(env, params)
         x = jnp.asarray(x, dtype=jnp.float32)
-        if x.ndim == 0:
-            x = jnp.broadcast_to(x, (n_rows,) + (1,) * len(pp.axes))
+        if ta.batched:
+            if x.ndim == 1:        # (N,) per-node scalar -> (N, 1, ..., 1)
+                x = x.reshape(x.shape + (1,) * (1 + n_frame))
+        elif x.ndim == 0:
+            x = jnp.broadcast_to(x, (n_rows,) + (1,) * n_frame)
         acc = x if acc is None else acc * x
     if acc is None:  # pure count: Π over empty set = 1
-        acc = jnp.ones((n_rows,) + (1,) * len(pp.axes), dtype=jnp.float32)
-    if len(pp.axes) > pp.n_keep:  # marginalize the non-output axes
-        full = (n_rows,) + pp.axis_dims
+        acc = jnp.ones((n_rows,) + (1,) * n_frame, dtype=jnp.float32)
+    lead = acc.ndim - n_frame  # 1, or 2 when the node axis is present
+    if n_frame > pp.n_keep:  # marginalize the non-output axes
+        full = acc.shape[:lead - 1] + (n_rows,) + pp.axis_dims
         acc = jnp.broadcast_to(acc, full)
-        acc = acc.sum(axis=tuple(range(1 + pp.n_keep, 1 + len(pp.axes))))
+        acc = acc.sum(axis=tuple(range(lead + pp.n_keep, lead + n_frame)))
     return acc
 
 
@@ -103,17 +127,25 @@ def col_payload(cp: ColProgram, cols: Cols,
 
 def view_payload(vp: ViewProgram, cols: Cols,
                  gathered: Mapping[int, jnp.ndarray], params: Params,
-                 valid: jnp.ndarray, n_rows: int) -> jnp.ndarray:
-    """(B, *pulled_dims, n_aggs) contributions of a row block to view vp."""
+                 valid: jnp.ndarray, n_rows: int,
+                 n_nodes: Optional[int] = None) -> jnp.ndarray:
+    """(B, *pulled_dims, n_aggs) contributions of a row block to view vp —
+    (N, B, *pulled_dims, n_aggs) for batched views."""
     out_cols = [col_payload(cp, cols, gathered, params, n_rows)
                 * reshape_axes(valid, vp.pulled)
                 for cp in vp.cols]
     target = (n_rows,) + vp.pulled_dims
+    if vp.batched:
+        assert n_nodes is not None, f"view {vp.vid}: batched but n_nodes unset"
+        target = (n_nodes,) + target
     out_cols = [jnp.broadcast_to(c, target) for c in out_cols]
     return jnp.stack(out_cols, axis=-1)
 
 
 def finalize(vp: ViewProgram, acc: jnp.ndarray) -> jnp.ndarray:
-    """Unflatten the segment axis and transpose to canonical group-by order."""
-    arr = acc.reshape(vp.out_dims + (vp.n_aggs,))
-    return jnp.transpose(arr, vp.out_perm)
+    """Unflatten the segment axis and transpose to canonical group-by order;
+    leading node axis (batched views) stays in place."""
+    lead = acc.ndim - len(vp.acc_shape)
+    arr = acc.reshape(acc.shape[:lead] + vp.out_dims + (vp.n_aggs,))
+    perm = tuple(range(lead)) + tuple(lead + p for p in vp.out_perm)
+    return jnp.transpose(arr, perm)

@@ -46,7 +46,7 @@ class PallasBackend:
 
     def run_step(self, prog: StepProgram, rel_cols: Mapping[str, jnp.ndarray],
                  arrays: Dict[int, jnp.ndarray], params: Params, *,
-                 n_valid: int, offset, config) -> None:
+                 n_valid: int, offset, config, n_nodes=None) -> None:
         from repro.kernels import ops
 
         interpret = _resolve_interpret(config)
@@ -73,17 +73,28 @@ class PallasBackend:
         buckets = sorted(bucket_map.items())
 
         def flat_width(vp: ViewProgram) -> int:
-            w = vp.n_aggs
+            # batched views fold the node axis into the kernel's aggregate
+            # column axis: one launch still reduces every node's columns
+            w = vp.n_aggs * (n_nodes if vp.batched else 1)
             for d in vp.pulled_dims:
                 w *= d
             return w
 
-        hist_accs = tuple(jnp.zeros((vp.hist.n_buckets, 3), jnp.float32)
-                          for vp in hist_views)
+        hist_accs = tuple(
+            jnp.zeros(((n_nodes,) if vp.batched else ())
+                      + (vp.hist.n_buckets, 3), jnp.float32)
+            for vp in hist_views)
         bucket_accs = tuple(
             jnp.zeros((vps[0].seg.n_segments if key else 1,
                        sum(flat_width(vp) for vp in vps)), jnp.float32)
             for key, vps in buckets)
+
+        def _flat_payload(vp: ViewProgram, blk_cols, gathered, valid):
+            p = common.view_payload(vp, blk_cols, gathered, params, valid, B,
+                                    n_nodes)
+            if vp.batched:   # (N, B, *pulled, n_aggs) -> (B, N·pulled·n_aggs)
+                p = jnp.moveaxis(p, 0, 1)
+            return p.reshape(B, -1)
 
         def body(carry, xs):
             hist_accs, bucket_accs = carry
@@ -100,18 +111,26 @@ class PallasBackend:
             for vp, acc in zip(hist_views, hist_accs):
                 cond = common.col_payload(vp.hist.cond, blk_cols, gathered,
                                           params, B) * valid
-                out = ops.tree_hist(blk_cols[vp.hist.code_attr],
-                                    blk_cols[vp.hist.y_attr].astype(jnp.float32),
-                                    cond, vp.hist.n_buckets,
-                                    block_rows=self.block_rows,
-                                    interpret=interpret)
+                if vp.batched:
+                    # cond (N, B): one multi-node kernel pass serves the
+                    # entire frontier (accumulator (N, D, 3) stays in VMEM)
+                    out = ops.tree_hist_batched(
+                        blk_cols[vp.hist.code_attr],
+                        blk_cols[vp.hist.y_attr].astype(jnp.float32),
+                        jnp.swapaxes(cond, 0, 1), vp.hist.n_buckets,
+                        block_rows=self.block_rows, interpret=interpret)
+                else:
+                    out = ops.tree_hist(
+                        blk_cols[vp.hist.code_attr],
+                        blk_cols[vp.hist.y_attr].astype(jnp.float32),
+                        cond, vp.hist.n_buckets,
+                        block_rows=self.block_rows, interpret=interpret)
                 new_hist.append(acc + out)
 
             new_buckets = []
             for (key, vps), acc in zip(buckets, bucket_accs):
                 payload = jnp.concatenate(
-                    [common.view_payload(vp, blk_cols, gathered, params,
-                                         valid, B).reshape(B, -1)
+                    [_flat_payload(vp, blk_cols, gathered, valid)
                      for vp in vps], axis=1)
                 if key:
                     seg = common.segment_ids(blk_cols, vps[0].seg)
@@ -135,9 +154,12 @@ class PallasBackend:
             for vp in vps:
                 w = flat_width(vp)
                 n_seg = vp.seg.n_segments if vp.seg is not None else 1
-                acc = out[:, o:o + w].reshape((n_seg,) + vp.pulled_dims
+                lead = (n_nodes,) if vp.batched else ()
+                acc = out[:, o:o + w].reshape((n_seg,) + lead + vp.pulled_dims
                                               + (vp.n_aggs,))
                 if vp.seg is None:
                     acc = acc[0]
+                elif vp.batched:
+                    acc = jnp.moveaxis(acc, 1, 0)   # node axis back in front
                 arrays[vp.vid] = common.finalize(vp, acc)
                 o += w

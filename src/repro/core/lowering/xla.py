@@ -32,7 +32,7 @@ class XlaBackend:
 
     def run_step(self, prog: StepProgram, rel_cols: Mapping[str, jnp.ndarray],
                  arrays: Dict[int, jnp.ndarray], params: Params, *,
-                 n_valid: int, offset, config) -> None:
+                 n_valid: int, offset, config, n_nodes=None) -> None:
         n_pad = int(next(iter(rel_cols.values())).shape[0])
         B = min(config.block_size, max(n_pad, 1))
         n_blocks = max(_ceil_to(n_pad, B) // B, 1)
@@ -45,7 +45,10 @@ class XlaBackend:
             cols_blocked[a] = cp.reshape(n_blocks, B)
         iota = jnp.arange(n_blocks, dtype=jnp.int32)
 
-        accs = tuple(jnp.zeros(vp.acc_shape, dtype=jnp.float32)
+        # batched views carry the param-batch (node) axis in front: one
+        # relation pass accumulates all N parameter settings at once
+        accs = tuple(jnp.zeros(((n_nodes,) if vp.batched else ())
+                               + vp.acc_shape, dtype=jnp.float32)
                      for vp in prog.views)
 
         def body(carry, xs):
@@ -64,13 +67,20 @@ class XlaBackend:
             new_accs = []
             for vp, acc in zip(prog.views, accs):
                 payload = common.view_payload(vp, blk_cols, gathered, params,
-                                              valid, B)
+                                              valid, B, n_nodes)
                 if vp.seg is not None:
                     seg = common.segment_ids(blk_cols, vp.seg)
-                    contrib = jax.ops.segment_sum(
-                        payload, seg, num_segments=vp.seg.n_segments)
+                    if vp.batched:
+                        # segment_sum reduces axis 0: rows forward, node
+                        # axis back, then restore the leading node axis
+                        contrib = jnp.swapaxes(jax.ops.segment_sum(
+                            jnp.swapaxes(payload, 0, 1), seg,
+                            num_segments=vp.seg.n_segments), 0, 1)
+                    else:
+                        contrib = jax.ops.segment_sum(
+                            payload, seg, num_segments=vp.seg.n_segments)
                 else:
-                    contrib = payload.sum(axis=0)
+                    contrib = payload.sum(axis=1 if vp.batched else 0)
                 new_accs.append(acc + contrib)
             return tuple(new_accs), None
 

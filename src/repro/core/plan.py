@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.core.aggregates import Params
 from repro.core.groups import ViewGroup
-from repro.core.ir import StepProgram, build_programs, fuse_programs
+from repro.core.ir import (StepProgram, batched_param_names, build_programs,
+                           compute_batched_vids, fuse_programs)
 from repro.core.jointree import JoinTree
 from repro.core.lowering import get_backend
 from repro.core.pushdown import PushdownResult
@@ -70,17 +71,27 @@ class ExecutablePlan:
             fuse_programs([self.programs[gid] for gid in step.gids])
             for step in self.schedule.steps]
         self.backend = get_backend(self.config.backend)
+        # param-batch (node) axis bookkeeping (DESIGN.md §7.4)
+        self.batched_vids = compute_batched_vids(result.views)
+        self.batched_params = batched_param_names(result.views)
 
     # ------------------------------------------------------------------ api
 
-    def bind(self, n_rows: Dict[str, int]):
+    def bind(self, n_rows: Dict[str, int], n_nodes: Optional[int] = None):
         """Returns a pure fn(columns, params, offsets) -> {query: array}; the
         caller jits it.  ``n_rows`` are the *valid* row counts (columns may be
         padded beyond them); ``offsets`` shift validity windows for sharded
-        execution (see distributed.py)."""
+        execution (see distributed.py).  ``n_nodes`` is the param-batch (node)
+        axis size — required iff the plan has batched params, in which case
+        each batched param must carry a leading axis of that size and batched
+        query outputs gain a leading node axis."""
         # the closure must capture its own copy: a retrace of a cached runner
         # would otherwise read row counts from whichever bind() ran last
         n_rows = dict(n_rows)
+        if self.batched_params and n_nodes is None:
+            raise ValueError(
+                f"plan has batched params {sorted(self.batched_params)}; "
+                "bind with n_nodes (use CompiledBatch.run_batched)")
 
         def run(columns: Columns, params: Params, offsets: Optional[Mapping[str, jnp.ndarray]] = None,
                 psum_axes: Optional[Mapping[str, str]] = None):
@@ -91,7 +102,8 @@ class ExecutablePlan:
                 self.backend.run_step(
                     prog, columns[step.rel], arrays, params,
                     n_valid=n_rows[step.rel],
-                    offset=offsets.get(step.rel, 0), config=self.config)
+                    offset=offsets.get(step.rel, 0), config=self.config,
+                    n_nodes=n_nodes)
                 if step.rel in psum_axes:
                     for vid in step.vids:
                         arrays[vid] = jax.lax.psum(arrays[vid],
@@ -100,9 +112,12 @@ class ExecutablePlan:
             for qname, qo in self.result.outputs.items():
                 arr = arrays[qo.vid]
                 cols = jnp.take(arr, jnp.asarray(qo.cols), axis=-1)
-                # canonical axis order -> user group-by order
-                perm = [qo.canonical_group_by.index(a) for a in qo.query.group_by]
-                perm = perm + [len(perm)]  # agg axis last
+                # canonical axis order -> user group-by order; a leading node
+                # axis (batched outputs) stays in front
+                lead = 1 if qo.vid in self.batched_vids else 0
+                perm = [qo.canonical_group_by.index(a) + lead
+                        for a in qo.query.group_by]
+                perm = list(range(lead)) + perm + [lead + len(qo.query.group_by)]
                 out[qname] = jnp.transpose(cols, perm)
             return out
 

@@ -16,27 +16,10 @@ import jax.numpy as jnp
 
 from repro.kernels.covar_xtx import covar_xtx_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.padding import pad_dim as _pad_dim
+from repro.kernels.padding import pad_rows as _pad_rows
 from repro.kernels.seg_aggregate import seg_aggregate_pallas
-from repro.kernels.tree_hist import tree_hist_pallas
-
-
-def _pad_rows(x: jnp.ndarray, m: int) -> jnp.ndarray:
-    n = x.shape[0]
-    target = ((n + m - 1) // m) * m
-    if target == n:
-        return x
-    pad = [(0, target - n)] + [(0, 0)] * (x.ndim - 1)
-    return jnp.pad(x, pad)
-
-
-def _pad_dim(x: jnp.ndarray, axis: int, m: int) -> jnp.ndarray:
-    n = x.shape[axis]
-    target = ((n + m - 1) // m) * m
-    if target == n:
-        return x
-    pad = [(0, 0)] * x.ndim
-    pad[axis] = (0, target - n)
-    return jnp.pad(x, pad)
+from repro.kernels.tree_hist import tree_hist_batched_pallas, tree_hist_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret", "feature_align"))
@@ -85,6 +68,21 @@ def tree_hist(codes: jnp.ndarray, y: jnp.ndarray, cond: jnp.ndarray,
     out = tree_hist_pallas(codesp, yp, condp, n_buckets + 1,
                            block_rows=block_rows, interpret=interpret)
     return out[:n_buckets]
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "block_rows", "interpret"))
+def tree_hist_batched(codes: jnp.ndarray, y: jnp.ndarray, cond: jnp.ndarray,
+                      n_buckets: int, *, block_rows: int = 512,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Per-node, per-bucket [count, Σy, Σy²]: ``cond`` is (n, N) — one mask
+    column per frontier node — and the result is (N, n_buckets, 3), computed
+    in one fused kernel pass over the rows (DESIGN.md §7.4).  No sacrificial
+    bucket: the kernel zero-pads ``cond``, so padded rows contribute nothing
+    wherever their codes land."""
+    return tree_hist_batched_pallas(codes.astype(jnp.int32),
+                                    y.astype(jnp.float32),
+                                    cond.astype(jnp.float32), n_buckets,
+                                    block_rows=block_rows, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",

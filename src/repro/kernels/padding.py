@@ -1,0 +1,26 @@
+"""Shared row-padding helpers for the Pallas kernel wrappers."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pad_rows(x: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Zero-pad axis 0 up to the next multiple of ``m``."""
+    n = x.shape[0]
+    target = ((n + m - 1) // m) * m
+    if target == n:
+        return x
+    pad = [(0, target - n)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+def pad_dim(x: jnp.ndarray, axis: int, m: int) -> jnp.ndarray:
+    """Zero-pad ``axis`` up to the next multiple of ``m``."""
+    n = x.shape[axis]
+    target = ((n + m - 1) // m) * m
+    if target == n:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - n)
+    return jnp.pad(x, pad)

@@ -25,6 +25,13 @@ def tree_hist_ref(codes: jnp.ndarray, y: jnp.ndarray, cond: jnp.ndarray,
     return seg_aggregate_ref(codes, payload, n_buckets)
 
 
+def tree_hist_batched_ref(codes: jnp.ndarray, y: jnp.ndarray,
+                          cond: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    """cond (n, N) node-mask columns -> (N, n_buckets, 3)."""
+    return jnp.stack([tree_hist_ref(codes, y, cond[:, j], n_buckets)
+                      for j in range(cond.shape[1])])
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                   causal: bool = True, window: int = 0) -> jnp.ndarray:
     """Dense reference attention with GQA, causal and sliding-window masks."""

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.padding import pad_rows as _pad_rows
+
 
 def _seg_kernel(seg_ref, pay_ref, o_ref, acc_ref):
     i = pl.program_id(0)
@@ -39,10 +41,13 @@ def seg_aggregate_pallas(seg: jnp.ndarray, payload: jnp.ndarray, n_segments: int
     """out[s, a] = Σ_{n: seg[n]=s} payload[n, a].
 
     seg: (N,) int32 in [0, n_segments) (out-of-range rows contribute nowhere —
-    the ops wrapper uses seg = n_segments for padding); payload: (N, A) f32."""
+    the ops wrapper uses seg = n_segments for padding); payload: (N, A) f32.
+    Rows are padded to a ``block_rows`` multiple with zeroed payload (padded
+    rows land in segment 0 but contribute 0), so any N works."""
+    assert seg.shape == (payload.shape[0],)
+    seg = _pad_rows(seg.astype(jnp.int32), block_rows)
+    payload = _pad_rows(payload, block_rows)
     n, a = payload.shape
-    assert seg.shape == (n,)
-    assert n % block_rows == 0, (n, block_rows)
     return pl.pallas_call(
         _seg_kernel,
         grid=(n // block_rows,),

@@ -11,23 +11,42 @@ conditions is Π_g mask_g[X_g], one mask-lookup UDAF per split attribute whose
 (0/1) mask arrays are **runtime parameters**.  LMFAO recompiles + dlopens
 per-node C++ for these (paper §1.2); under JAX tracing the masks are traced
 arguments, so the whole tree is built from a single compiled batch.
+
+Frontier-batched fitting (DESIGN.md §7.4): with ``node_batch=True`` (default)
+the mask params are declared ``batched``, the engine threads a param-batch
+(node) axis through every layer, and ``fit()`` grows the tree
+*level-synchronously* — all frontier nodes of a level are evaluated in ONE
+``CompiledBatch.run_batched`` dispatch, and each node's own stats (count,
+prediction) are read from the same pass that scores its splits, so there is
+no per-leaf backfill.  ``node_batch=False`` keeps the per-node dispatch loop
+(one engine call per node) for comparison; both produce identical trees.
+The stepping API (``init_fit`` / ``frontier_masks`` / ``advance``) lets
+``ml/forest.py`` drive many trees' frontiers through one shared batch.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import COUNT, Delta, Engine, Lambda, Pow, Var, agg, query
+from repro.core import Delta, Engine, Lambda, Pow, Var, agg, query
+from repro.core.aggregates import Param
 from repro.data.datasets import Dataset
 
 
-def _mask_term(attr: str) -> Lambda:
-    def fn(x, params, _attr=attr):
-        return params[f"mask_{_attr}"][x]
-    return Lambda((attr,), fn, tag=f"mask_{attr}")
+def _mask_term(attr: str, batched: bool = False) -> Lambda:
+    p = Param(f"mask_{attr}", batched=batched)
+
+    def fn(x, params, _name=p.name):
+        # lookup-table UDAF: (D,) mask -> row mask; (N, D) batched masks ->
+        # (N, *rows) with the node axis leading (DESIGN.md §7.4)
+        return jnp.take(params[_name], x, axis=-1)
+
+    tag = f"mask_{attr}" + (":batched" if batched else "")
+    return Lambda((attr,), fn, tag=tag, param_refs=(p,))
 
 
 @dataclasses.dataclass
@@ -55,8 +74,112 @@ class TreeNode:
         return self.left < 0
 
 
+def build_tree_features(ds: Dataset, label: Optional[str],
+                        split_attrs: Optional[Sequence[str]]) -> List[SplitFeature]:
+    if split_attrs is None:
+        split_attrs = ([ds.bucket_attr(c) for c in ds.features_cont
+                        if ds.bucket_attr(c) in ds.schema.attributes] +
+                       [c for c in ds.features_cat if c != label])
+    feats = []
+    for a in split_attrs:
+        kind = "ordered" if a.endswith("__b") else "categorical"
+        feats.append(SplitFeature(a, kind, ds.schema.domain(a)))
+    return feats
+
+
+def build_tree_batch(ds: Dataset, features: Sequence[SplitFeature], task: str,
+                     label: str, n_classes: int, *, node_batch: bool = True,
+                     block_size: int = 4096, multi_root: bool = True,
+                     backend: str = "xla", interpret: Optional[bool] = None):
+    """Compile the per-feature split-statistics batch shared by a whole tree
+    (or forest).  One query per feature: [COUNT, SUM(y), SUM(y²)] (regression)
+    or [COUNT, per-class counts] (classification) under the node-condition
+    mask product, grouped by the feature's code domain."""
+    cond = [_mask_term(f.attr, batched=node_batch) for f in features]
+    queries = []
+    for f in features:
+        if task == "regression":
+            aggs = [agg(*cond), agg(Var(label), *cond),
+                    agg(Pow(label, 2), *cond)]
+        else:
+            aggs = [agg(*cond)] + [agg(Delta(label, "==", c), *cond)
+                                   for c in range(n_classes)]
+        queries.append(query(f"split_{f.attr}", [f.attr], aggs))
+    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
+    batch = eng.compile(queries, multi_root=multi_root, block_size=block_size,
+                        backend=backend, interpret=interpret)
+    return batch, queries
+
+
+def stack_mask_params(features: Sequence[SplitFeature],
+                      mask_list: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray]:
+    """Stack per-node mask dicts into the (N, D) batched param arrays."""
+    return {f"mask_{f.attr}": np.stack([m[f.attr] for m in mask_list]
+                                       ).astype(np.float32)
+            for f in features}
+
+
+def child_masks(masks: Dict[str, np.ndarray], feat: str, kind: str,
+                thr: int) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray]]:
+    """Left/right node masks after splitting on ``feat`` at ``thr``."""
+    lm = {a: m.copy() for a, m in masks.items()}
+    rm = {a: m.copy() for a, m in masks.items()}
+    d = lm[feat].shape[0]
+    if kind == "ordered":
+        ind = (np.arange(d) <= thr).astype(np.float32)
+    else:
+        ind = (np.arange(d) == thr).astype(np.float32)
+    lm[feat] = lm[feat] * ind
+    rm[feat] = rm[feat] * (1.0 - ind)
+    return lm, rm
+
+
+def predict_nodes(nodes: Sequence[TreeNode], rows: Dict[str, np.ndarray],
+                  max_depth: int) -> np.ndarray:
+    """Vectorized tree walk over materialized rows (test-time only)."""
+    n = len(next(iter(rows.values())))
+    out = np.zeros(n, dtype=np.float64)
+    idx = np.zeros(n, dtype=np.int64)
+    active = np.ones(n, dtype=bool)
+    for _ in range(max_depth + 1):
+        moved = False
+        for nid, node in enumerate(nodes):
+            sel = active & (idx == nid)
+            if not sel.any():
+                continue
+            if node.is_leaf:
+                out[sel] = node.prediction
+                active[sel] = False
+            else:
+                moved = True
+                codes = np.asarray(rows[node.feature])[sel]
+                if node.kind == "ordered":
+                    goleft = codes <= node.threshold
+                else:
+                    goleft = codes == node.threshold
+                tmp = idx[sel]
+                tmp[goleft] = node.left
+                tmp[~goleft] = node.right
+                idx[sel] = tmp
+        if not moved:
+            break
+    for nid, node in enumerate(nodes):  # flush remaining
+        sel = active & (idx == nid)
+        if sel.any():
+            out[sel] = node.prediction
+    return out
+
+
 class DecisionTree:
-    """CART via one LMFAO batch; task ∈ {'regression', 'classification'}."""
+    """CART via one LMFAO batch; task ∈ {'regression', 'classification'}.
+
+    ``node_batch=True`` grows the tree frontier-batched (one fused dispatch
+    per level); ``node_batch=False`` dispatches once per node.  Both run the
+    same level-synchronous algorithm and produce identical trees.
+    ``allowed_attrs`` restricts the split search to a feature subset (random
+    forests pass per-tree subsets while sharing one compiled batch); ``batch``
+    injects a pre-compiled shared batch (see ``ml/forest.py``).
+    """
 
     def __init__(self, ds: Dataset, task: str = "regression",
                  label: Optional[str] = None,
@@ -64,7 +187,9 @@ class DecisionTree:
                  max_depth: int = 4, min_instances: int = 1000,
                  max_nodes: int = 31, block_size: int = 4096,
                  multi_root: bool = True, backend: str = "xla",
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None, node_batch: bool = True,
+                 allowed_attrs: Optional[Sequence[str]] = None,
+                 batch=None):
         self.ds = ds
         self.task = task
         self.label = label or (ds.label if task == "regression" else None)
@@ -73,45 +198,30 @@ class DecisionTree:
         self.max_depth = max_depth
         self.min_instances = min_instances
         self.max_nodes = max_nodes
+        self.node_batch = node_batch
 
-        if split_attrs is None:
-            split_attrs = ([ds.bucket_attr(c) for c in ds.features_cont
-                            if ds.bucket_attr(c) in ds.schema.attributes] +
-                           [c for c in ds.features_cat if c != self.label])
-        self.features: List[SplitFeature] = []
-        for a in split_attrs:
-            kind = "ordered" if a.endswith("__b") else "categorical"
-            self.features.append(SplitFeature(a, kind, ds.schema.domain(a)))
+        self.features: List[SplitFeature] = build_tree_features(
+            ds, self.label if task == "classification" else None, split_attrs)
+        self.allowed_attrs: Optional[Set[str]] = (
+            set(allowed_attrs) if allowed_attrs is not None else None)
 
         if task == "classification":
             self.n_classes = ds.schema.domain(self.label)
         else:
             self.n_classes = 0
 
-        self._build_batch(block_size, multi_root, backend, interpret)
+        if batch is None:
+            batch, queries = build_tree_batch(
+                ds, self.features, task, self.label, self.n_classes,
+                node_batch=node_batch, block_size=block_size,
+                multi_root=multi_root, backend=backend, interpret=interpret)
+            self._queries = queries
+        self.batch = batch
+        self.n_aggregates = sum(
+            (3 if task == "regression" else 1 + self.n_classes)
+            * self.ds.schema.domain(f.attr) for f in self.features)
         self.nodes: List[TreeNode] = []
-
-    # -- the aggregate batch (compiled once for the whole tree) --------------
-
-    def _build_batch(self, block_size: int, multi_root: bool,
-                     backend: str = "xla",
-                     interpret: Optional[bool] = None) -> None:
-        cond = [_mask_term(f.attr) for f in self.features]
-        queries = []
-        for f in self.features:
-            if self.task == "regression":
-                aggs = [agg(*cond), agg(Var(self.label), *cond),
-                        agg(Pow(self.label, 2), *cond)]
-            else:
-                aggs = [agg(*cond)] + [agg(Delta(self.label, "==", c), *cond)
-                                       for c in range(self.n_classes)]
-            queries.append(query(f"split_{f.attr}", [f.attr], aggs))
-        eng = Engine(self.ds.schema, edges=self.ds.edges, sizes=self.ds.db.sizes())
-        self.batch = eng.compile(queries, multi_root=multi_root,
-                                 block_size=block_size, backend=backend,
-                                 interpret=interpret)
-        self.n_aggregates = sum(len(q.aggregates) * self.ds.schema.domain(q.group_by[0])
-                                for q in queries)
+        self._frontier: List[int] = []
 
     def _node_params(self, masks: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
         return {f"mask_{a}": m.astype(np.float32) for a, m in masks.items()}
@@ -133,26 +243,44 @@ class DecisionTree:
             pred = stats[..., 1:].argmax(-1).astype(np.float64)
         return n, cost, pred
 
-    # -- fitting ---------------------------------------------------------------
+    # -- level-synchronous fitting (stepping API shared with ml/forest.py) ----
 
-    def fit(self) -> "DecisionTree":
-        root_masks = {f.attr: np.ones(f.domain, dtype=np.float32) for f in self.features}
+    def init_fit(self) -> None:
+        root_masks = {f.attr: np.ones(f.domain, dtype=np.float32)
+                      for f in self.features}
         self.nodes = [TreeNode(0, 0, root_masks)]
-        frontier = [0]
-        while frontier and len(self.nodes) < self.max_nodes:
-            nid = frontier.pop(0)
+        self._frontier = [0]
+
+    @property
+    def growing(self) -> bool:
+        return bool(self._frontier)
+
+    def frontier_masks(self) -> List[Dict[str, np.ndarray]]:
+        """Masks of the current frontier nodes, in frontier order."""
+        return [self.nodes[nid].masks for nid in self._frontier]
+
+    def advance(self, stats: Dict[str, np.ndarray]) -> None:
+        """Consume one level's statistics — ``stats[attr]`` is
+        ``(n_frontier, D_attr, n_aggs)`` — record every frontier node's count
+        and prediction (leaf stats come from the same pass that scores the
+        splits: no backfill), expand the winners, and move the frontier down
+        one level."""
+        next_frontier: List[int] = []
+        for i, nid in enumerate(self._frontier):
             node = self.nodes[nid]
-            outputs = self.batch(self.ds.db, params=self._node_params(node.masks))
-            best = self._best_split(outputs)
-            # record node stats from any feature's totals
-            first = np.asarray(outputs[f"split_{self.features[0].attr}"], np.float64)
-            tot = first.sum(axis=0)
-            n, cost, pred = self._cost(tot)
+            node_stats = {f.attr: stats[f.attr][i] for f in self.features}
+            tot = node_stats[self.features[0].attr].sum(axis=0)
+            n, _, pred = self._cost(tot)
             node.n, node.prediction = float(n), float(pred)
-            if best is None or node.depth >= self.max_depth:
+            if node.depth >= self.max_depth:
+                continue
+            best = self._best_split(node_stats)
+            if best is None:
                 continue
             feat, kind, thr, gain = best
             if gain <= 1e-9:
+                continue
+            if len(self.nodes) + 2 > self.max_nodes:
                 continue
             lm, rm = self._child_masks(node.masks, feat, kind, thr)
             node.feature, node.kind, node.threshold = feat, kind, thr
@@ -160,28 +288,45 @@ class DecisionTree:
             self.nodes.append(TreeNode(node.left, node.depth + 1, lm))
             node.right = len(self.nodes)
             self.nodes.append(TreeNode(node.right, node.depth + 1, rm))
-            frontier += [node.left, node.right]
-        # fill leaf stats for nodes never expanded
-        for node in self.nodes:
-            if node.n == 0.0:
-                outputs = self.batch(self.ds.db, params=self._node_params(node.masks))
-                first = np.asarray(outputs[f"split_{self.features[0].attr}"], np.float64)
-                n, _, pred = self._cost(first.sum(axis=0))
-                node.n, node.prediction = float(n), float(pred)
+            next_frontier += [node.left, node.right]
+        self._frontier = next_frontier
+
+    def _eval_frontier(self) -> Dict[str, np.ndarray]:
+        """One level's statistics, (n_frontier, D, n_aggs) per feature: a
+        single fused dispatch when node-batched, one dispatch per node in the
+        per-node comparison mode."""
+        mask_list = self.frontier_masks()
+        if self.node_batch:
+            params = stack_mask_params(self.features, mask_list)
+            outputs = self.batch.run_batched(self.ds.db, params)
+            return {f.attr: np.asarray(outputs[f"split_{f.attr}"], np.float64)
+                    for f in self.features}
+        per_node = [self.batch(self.ds.db, params=self._node_params(m))
+                    for m in mask_list]
+        return {f.attr: np.stack([np.asarray(o[f"split_{f.attr}"], np.float64)
+                                  for o in per_node])
+                for f in self.features}
+
+    def fit(self) -> "DecisionTree":
+        self.init_fit()
+        while self.growing:
+            self.advance(self._eval_frontier())
         return self
 
-    def _best_split(self, outputs) -> Optional[Tuple[str, str, int, float]]:
+    def _best_split(self, stats: Dict[str, np.ndarray]) -> Optional[Tuple[str, str, int, float]]:
         best = None
         for f in self.features:
-            stats = np.asarray(outputs[f"split_{f.attr}"], np.float64)  # (D, n_aggs)
-            tot = stats.sum(axis=0)
+            if self.allowed_attrs is not None and f.attr not in self.allowed_attrs:
+                continue
+            fstats = stats[f.attr]                        # (D, n_aggs)
+            tot = fstats.sum(axis=0)
             n_tot, cost_tot, _ = self._cost(tot)
             if n_tot < 2 * self.min_instances:
                 continue
             if f.kind == "ordered":
-                left = np.cumsum(stats, axis=0)[:-1]      # thresholds 0..D-2
+                left = np.cumsum(fstats, axis=0)[:-1]     # thresholds 0..D-2
             else:
-                left = stats                               # one-vs-rest
+                left = fstats                              # one-vs-rest
             right = tot[None, :] - left
             nl, cl, _ = self._cost(left)
             nr, cr, _ = self._cost(right)
@@ -195,52 +340,12 @@ class DecisionTree:
         return best
 
     def _child_masks(self, masks, feat: str, kind: str, thr: int):
-        lm = {a: m.copy() for a, m in masks.items()}
-        rm = {a: m.copy() for a, m in masks.items()}
-        d = lm[feat].shape[0]
-        if kind == "ordered":
-            ind = (np.arange(d) <= thr).astype(np.float32)
-        else:
-            ind = (np.arange(d) == thr).astype(np.float32)
-        lm[feat] = lm[feat] * ind
-        rm[feat] = rm[feat] * (1.0 - ind)
-        return lm, rm
+        return child_masks(masks, feat, kind, thr)
 
     # -- inference over materialized rows (test-time only) ---------------------
 
     def predict(self, rows: Dict[str, np.ndarray]) -> np.ndarray:
-        n = len(next(iter(rows.values())))
-        out = np.zeros(n, dtype=np.float64)
-        idx = np.zeros(n, dtype=np.int64)
-        active = np.ones(n, dtype=bool)
-        # iterative tree walk (vectorized per node)
-        for _ in range(self.max_depth + 1):
-            moved = False
-            for nid, node in enumerate(self.nodes):
-                sel = active & (idx == nid)
-                if not sel.any():
-                    continue
-                if node.is_leaf:
-                    out[sel] = node.prediction
-                    active[sel] = False
-                else:
-                    moved = True
-                    codes = np.asarray(rows[node.feature])[sel]
-                    if node.kind == "ordered":
-                        goleft = codes <= node.threshold
-                    else:
-                        goleft = codes == node.threshold
-                    tmp = idx[sel]
-                    tmp[goleft] = node.left
-                    tmp[~goleft] = node.right
-                    idx[sel] = tmp
-            if not moved:
-                break
-        for nid, node in enumerate(self.nodes):  # flush remaining
-            sel = active & (idx == nid)
-            if sel.any():
-                out[sel] = node.prediction
-        return out
+        return predict_nodes(self.nodes, rows, self.max_depth)
 
     def n_split_nodes(self) -> int:
         return sum(1 for n in self.nodes if not n.is_leaf)

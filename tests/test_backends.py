@@ -69,8 +69,10 @@ def test_pallas_matches_xla_tree_batch():
     masks = None
     outs = {}
     for be in ("xla", "pallas"):
+        # node_batch=False: the single-node hist fast path (the batched
+        # variant is covered by tests/test_frontier.py)
         dt = DecisionTree(ds, task="regression", max_depth=1, min_instances=10,
-                          max_nodes=3, backend=be)
+                          max_nodes=3, backend=be, node_batch=False)
         if masks is None:
             masks = {f"mask_{f.attr}": np.ones(f.domain, dtype=np.float32)
                      for f in dt.features}

@@ -1,0 +1,172 @@
+"""Frontier-batched node evaluation (DESIGN.md §7.4).
+
+The param-batch (node) axis must be *invisible* in the results: one
+``run_batched`` call with N node masks equals N single dispatches, on both
+lowering backends, for regression and classification trees — and it must not
+change the relation-scan schedule (the whole point: one pass serves all N
+nodes).  Forest workloads built on the axis must be deterministic under a
+fixed seed.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.plan import materialize_join
+from repro.data import datasets as D
+from repro.ml.forest import GradientBoostedTrees, RandomForest
+from repro.ml.trees import DecisionTree, predict_nodes
+
+FAV_ORDER = ["Oil", "Transactions", "Stores", "Sales", "Holiday", "Items"]
+TPCDS_ORDER = ["customer_demographics", "customer", "household_demographics",
+               "customer_address", "store_sales", "date_dim", "time_dim",
+               "item", "store", "promotion"]
+
+
+@pytest.fixture(scope="module")
+def fav():
+    ds = D.make("favorita", scale=0.02)
+    J = materialize_join(ds.schema, ds.tables, order=FAV_ORDER)
+    return ds, J
+
+
+@pytest.fixture(scope="module")
+def tpcds():
+    ds = D.make("tpcds", scale=0.02)
+    J = materialize_join(ds.schema, ds.tables, order=TPCDS_ORDER)
+    return ds, J
+
+
+def _tree_signature(dt: DecisionTree):
+    return [(n.feature, n.kind, n.threshold, round(n.n, 6),
+             round(n.prediction, 6)) for n in dt.nodes]
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_frontier_matches_per_node_regression(fav, backend):
+    ds, J = fav
+    kw = dict(task="regression", max_depth=3, min_instances=50, max_nodes=15,
+              backend=backend)
+    frontier = DecisionTree(ds, node_batch=True, **kw).fit()
+    per_node = DecisionTree(ds, node_batch=False, **kw).fit()
+    assert _tree_signature(frontier) == _tree_signature(per_node)
+    np.testing.assert_allclose(frontier.predict(J), per_node.predict(J))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_frontier_matches_per_node_classification(tpcds, backend):
+    ds, J = tpcds
+    kw = dict(task="classification", label="c_preferred", max_depth=2,
+              min_instances=50, max_nodes=7, backend=backend)
+    frontier = DecisionTree(ds, node_batch=True, **kw).fit()
+    per_node = DecisionTree(ds, node_batch=False, **kw).fit()
+    assert _tree_signature(frontier) == _tree_signature(per_node)
+    np.testing.assert_allclose(frontier.predict(J), per_node.predict(J))
+
+
+def test_run_batched_equals_single_runs_and_keeps_scan_schedule(fav):
+    """Acceptance: one run_batched call with N=8 node masks issues the same
+    number of relation scans as N=1 (schedule introspection), and the stacked
+    results equal 8 independent single-node dispatches."""
+    ds, _ = fav
+    batched = DecisionTree(ds, max_depth=1, min_instances=10, node_batch=True)
+    single = DecisionTree(ds, max_depth=1, min_instances=10, node_batch=False)
+
+    # the node axis must not change the compiled scan schedule
+    assert batched.batch.schedule.n_scans == single.batch.schedule.n_scans
+    assert batched.batch.stats.n_scan_steps == single.batch.stats.n_scan_steps
+
+    rng = np.random.default_rng(0)
+    N = 8
+    masks = [{f.attr: (rng.random(f.domain) < 0.7).astype(np.float32)
+              for f in batched.features} for _ in range(N)]
+    from repro.ml.trees import stack_mask_params
+    before = batched.batch.n_dispatches
+    outs = batched.batch.run_batched(
+        ds.db, stack_mask_params(batched.features, masks))
+    assert batched.batch.n_dispatches == before + 1   # ONE fused dispatch
+    for i in range(N):
+        ref = single.batch(ds.db, params=single._node_params(masks[i]))
+        for f in batched.features:
+            q = f"split_{f.attr}"
+            np.testing.assert_allclose(
+                np.asarray(outs[q])[i], np.asarray(ref[q]),
+                rtol=1e-4, atol=1e-4, err_msg=f"{q} node {i}")
+
+
+def test_fit_dispatches_once_per_level(fav):
+    """Acceptance: frontier-batched fit performs at most one engine dispatch
+    per tree level, with no per-leaf backfill dispatches."""
+    ds, _ = fav
+    dt = DecisionTree(ds, task="regression", max_depth=3, min_instances=50,
+                      max_nodes=15, node_batch=True).fit()
+    n_levels = max(n.depth for n in dt.nodes) + 1
+    assert dt.batch.n_dispatches <= n_levels
+    # every node got stats from its own frontier pass (no zero-stat leaves)
+    assert all(n.n > 0 for n in dt.nodes)
+
+
+def test_batched_output_layout(fav):
+    """Batched query outputs are (N, *group_dims, n_aggs) with the node axis
+    leading."""
+    ds, _ = fav
+    dt = DecisionTree(ds, max_depth=1, min_instances=10, node_batch=True)
+    masks = [{f.attr: np.ones(f.domain, np.float32) for f in dt.features}
+             for _ in range(3)]
+    from repro.ml.trees import stack_mask_params
+    outs = dt.batch.run_batched(ds.db, stack_mask_params(dt.features, masks))
+    f0 = dt.features[0]
+    assert np.asarray(outs[f"split_{f0.attr}"]).shape == (3, f0.domain, 3)
+
+
+def test_random_forest_deterministic_and_learns(fav):
+    ds, J = fav
+    kw = dict(n_trees=4, max_depth=3, min_instances=50, max_nodes=15, seed=7)
+    rf1 = RandomForest(ds, **kw).fit()
+    rf2 = RandomForest(ds, **kw).fit()
+    p1, p2 = rf1.predict(J), rf2.predict(J)
+    np.testing.assert_array_equal(p1, p2)        # fixed seed -> same forest
+    assert [t.allowed_attrs for t in rf1.trees] == \
+           [t.allowed_attrs for t in rf2.trees]
+    y = np.asarray(J[ds.label], np.float64)
+    base = np.sqrt(np.mean((y - y.mean()) ** 2))
+    assert np.sqrt(np.mean((y - p1) ** 2)) < 0.95 * base
+    # whole-forest frontier batching: one dispatch per forest level
+    max_levels = max(max(n.depth for n in t.nodes) for t in rf1.trees) + 1
+    assert rf1.batch.n_dispatches <= max_levels
+
+
+def test_gbt_residual_relabeling_in_engine(fav):
+    """The reconstructed residual histograms must equal host-side residuals
+    of the fitted ensemble, and training RMSE must improve with rounds."""
+    ds, J = fav
+    y = np.asarray(J[ds.label], np.float64)
+    gbt = GradientBoostedTrees(ds, n_rounds=2, learning_rate=0.5, max_depth=2,
+                               min_instances=50).fit()
+    r_host = y - gbt.predict(J)
+    root = [{f.attr: np.ones(f.domain, np.float32) for f in gbt.features}]
+    cnt, sr = gbt._residual_hists(root)[0][gbt.features[0].attr]
+    codes = np.asarray(J[gbt.features[0].attr])
+    sr_host = np.zeros(gbt.features[0].domain)
+    np.add.at(sr_host, codes, r_host)
+    np.testing.assert_allclose(cnt, np.bincount(codes, minlength=len(cnt)),
+                               rtol=1e-6)
+    np.testing.assert_allclose(sr, sr_host, rtol=1e-4, atol=1e-2)
+
+    rmse1 = np.sqrt(np.mean((y - GradientBoostedTrees(
+        ds, n_rounds=1, learning_rate=0.5, max_depth=2,
+        min_instances=50).fit().predict(J)) ** 2))
+    rmse2 = np.sqrt(np.mean((y - gbt.predict(J)) ** 2))
+    base = np.sqrt(np.mean((y - y.mean()) ** 2))
+    assert rmse1 < base
+    assert rmse2 < rmse1
+
+
+def test_gbt_deterministic(fav):
+    ds, J = fav
+    kw = dict(n_rounds=2, learning_rate=0.5, max_depth=2, min_instances=50)
+    g1 = GradientBoostedTrees(ds, **kw).fit()
+    g2 = GradientBoostedTrees(ds, **kw).fit()
+    np.testing.assert_array_equal(g1.predict(J), g2.predict(J))
+    assert len(g1.trees) == 2
+    for t1, t2 in zip(g1.trees, g2.trees):
+        assert [n.feature for n in t1] == [n.feature for n in t2]

@@ -48,6 +48,51 @@ def test_tree_hist(n, d, block):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("n,d,n_nodes,block", [(100, 20, 1, 64), (517, 20, 8, 128),
+                                               (1000, 7, 3, 512)])
+def test_tree_hist_batched(n, d, n_nodes, block):
+    """Multi-node kernel == per-node oracle, including unaligned row counts."""
+    rng = np.random.default_rng(n + n_nodes)
+    codes = rng.integers(0, d, n).astype(np.int32)
+    y = rng.normal(size=n).astype(np.float32)
+    cond = (rng.random((n, n_nodes)) < 0.5).astype(np.float32)
+    got = ops.tree_hist_batched(jnp.asarray(codes), jnp.asarray(y),
+                                jnp.asarray(cond), d, block_rows=block,
+                                interpret=True)
+    want = ref.tree_hist_batched_ref(jnp.asarray(codes), jnp.asarray(y),
+                                     jnp.asarray(cond), d)
+    assert got.shape == (n_nodes, d, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [1, 100, 517, 513])
+def test_kernels_pad_unaligned_rows(n):
+    """The raw pallas entry points accept any row count: rows are padded with
+    zeroed cond/payload instead of hard-asserting n % block_rows == 0."""
+    from repro.kernels.seg_aggregate import seg_aggregate_pallas
+    from repro.kernels.tree_hist import tree_hist_pallas
+    rng = np.random.default_rng(n)
+    d = 6
+    codes = rng.integers(0, d, n).astype(np.int32)
+    y = rng.normal(size=n).astype(np.float32)
+    cond = (rng.random(n) < 0.5).astype(np.float32)
+    got = tree_hist_pallas(jnp.asarray(codes), jnp.asarray(y),
+                           jnp.asarray(cond), d, block_rows=256,
+                           interpret=True)
+    want = ref.tree_hist_ref(jnp.asarray(codes), jnp.asarray(y),
+                             jnp.asarray(cond), d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    pay = rng.normal(size=(n, 3)).astype(np.float32)
+    seg = rng.integers(0, d, n).astype(np.int32)
+    got = seg_aggregate_pallas(jnp.asarray(seg), jnp.asarray(pay), d,
+                               block_rows=256, interpret=True)
+    want = ref.seg_aggregate_ref(jnp.asarray(seg), jnp.asarray(pay), d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("b,h,hkv,s,d", [(1, 2, 1, 64, 8), (2, 4, 2, 100, 16),
                                          (1, 4, 4, 96, 32)])
 @pytest.mark.parametrize("causal,window", [(True, 0), (True, 24), (False, 0)])
