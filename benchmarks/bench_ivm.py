@@ -1,0 +1,70 @@
+"""Incremental view maintenance vs full recomputation (DESIGN.md §8).
+
+Maintains the ridge covar batch under a streaming 1% update to the fact
+table (equal-count inserts + deletes, so sizes — and jit cache entries —
+stay fixed) and compares the warm per-tick cost against rerunning the full
+compiled batch over the current database.  The delta path scans only the
+delta tuples (all covar queries root at the fact), so the gap is the
+engine's |update| vs |database| work ratio — the IVM promise.
+
+    PYTHONPATH=src python -m benchmarks.bench_ivm
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BENCH_SCALE, row, timeit
+from repro.data import datasets as D
+from repro.data.relations import DeltaBatchUpdate
+from repro.ml.cubes import StreamingCube, cube_name
+from repro.ml.online import OnlineRidge
+
+
+def _fact_update(ds, rng, frac: float) -> DeltaBatchUpdate:
+    """Insert/delete ``frac`` of the fact rows each (sampled with repl.)."""
+    fact = ds.tables[ds.fact]
+    n = len(next(iter(fact.values())))
+    k = max(int(n * frac), 1)
+    pick = rng.integers(0, n, k)
+    ins = {a: np.asarray(c)[pick] for a, c in fact.items()}
+    return (DeltaBatchUpdate().insert(ds.fact, ins)
+            .delete(ds.fact, rng.choice(n, k, replace=False)))
+
+
+def main():
+    ds = D.make("favorita", scale=BENCH_SCALE)
+    rng = np.random.default_rng(11)
+    lines = []
+
+    olr = OnlineRidge(ds)
+    olr.fit()
+    mb = olr.maintained
+    n_fact = ds.db.relation(ds.fact).n_rows
+    upd = _fact_update(ds, rng, 0.01)
+
+    t_delta = timeit(lambda: mb.apply(upd))
+    t_full = timeit(lambda: mb.batch(mb.db))
+    dp = mb.delta_program(ds.fact)
+    lines.append(row(
+        "ivm/ridge_delta_1pct", t_delta,
+        f"rows={upd.updates[ds.fact].n_rows};delta_scans={dp.n_scans}"))
+    lines.append(row(
+        "ivm/ridge_full_recompute", t_full,
+        f"rows={n_fact};scans={mb.batch.stats.n_scan_steps};"
+        f"speedup={t_full / t_delta:.1f}x"))
+
+    # streaming cube: every 2^k cell live under the same update stream
+    dims = ["promo", "city", "stype"]
+    cube = StreamingCube(ds, dims, measures=["units"])
+    upd_c = _fact_update(ds, rng, 0.01)
+    t_cube = timeit(lambda: cube.update(upd_c))
+    lines.append(row(
+        "ivm/cube_delta_1pct", t_cube,
+        f"cells={2 ** len(dims)};finest={cube_name(dims)}"))
+
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

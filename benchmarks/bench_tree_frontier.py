@@ -81,10 +81,8 @@ def main():
         f"nodes={total};dispatches={gbt.batch.n_dispatches};"
         f"disp_per_node={gbt.batch.n_dispatches / total:.2f}"))
 
-    print("name,us,detail")
-    for ln in lines:
-        print(ln)
+    return lines
 
 
 if __name__ == "__main__":
-    main()
+    print("\n".join(main()))

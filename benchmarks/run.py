@@ -11,13 +11,14 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_fig5_ablation, bench_kernels,
+    from benchmarks import (bench_fig5_ablation, bench_ivm, bench_kernels,
                             bench_table2_views, bench_table3_aggregates,
-                            bench_table45_training)
+                            bench_table45_training, bench_tree_frontier)
     print("name,us_per_call,derived")
     ok = True
     for mod in [bench_table2_views, bench_table3_aggregates,
-                bench_table45_training, bench_fig5_ablation, bench_kernels]:
+                bench_table45_training, bench_fig5_ablation, bench_kernels,
+                bench_tree_frontier, bench_ivm]:
         try:
             for line in mod.main():
                 print(line, flush=True)

@@ -94,6 +94,26 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
     return jax.tree_util.tree_unflatten(tdef, flat), step
 
 
+# --------------------------------------------------------------------------
+# IVM view-state snapshots (core/ivm.py): a MaintainedBatch's state — update
+# counter, every materialized view tensor, and the current base relations —
+# is a pytree, so it rides the same crash-safe store as train state.
+# --------------------------------------------------------------------------
+
+def save_view_state(ckpt_dir: str, maintained, keep: int = 3) -> str:
+    """Snapshot a ``MaintainedBatch`` (its update counter names the step)."""
+    return save(ckpt_dir, maintained.step, maintained.snapshot_state(), keep=keep)
+
+
+def restore_view_state(ckpt_dir: str, maintained, step: Optional[int] = None) -> int:
+    """Load a view-state snapshot back into a ``MaintainedBatch`` compiled
+    for the same query batch (view ids and relation schemas must match; the
+    skeleton tree supplies the structure, so ``init`` need not have run)."""
+    tree, s = restore(ckpt_dir, maintained.state_skeleton(), step=step)
+    maintained.load_state(tree)
+    return s
+
+
 def _gc(ckpt_dir: str, keep: int) -> None:
     steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
                    and not d.endswith(".tmp"))

@@ -13,6 +13,12 @@ from repro.core.jointree import JoinTree, materialize_bag
 from repro.core.schema import (Attribute, DatabaseSchema, RelationSchema,
                                CATEGORICAL, CONTINUOUS, KEY, schema)
 
+# NOTE: the IVM subsystem (repro.core.ivm: MaintainedBatch, DeltaProgram) is
+# deliberately not imported here — it depends on repro.data.relations, which
+# imports repro.core.schema, and an eager import would cycle whenever
+# repro.data is imported first.  Reach it via Engine.compile_incremental or
+# `from repro.core.ivm import MaintainedBatch`.
+
 __all__ = [
     "Aggregate", "Constant", "Delta", "Lambda", "Param", "Pow", "ProductAgg",
     "Query", "Term", "Var", "agg", "COUNT", "query", "sum_of", "sum_prod",

@@ -230,3 +230,31 @@ class Engine:
         cfg = PlanConfig(block_size=block_size, backend=backend,
                          interpret=interpret, fuse_scans=fuse_scans)
         return CompiledBatch(self.schema, self.tree, result, groups, cfg, roots)
+
+    def compile_incremental(self, queries: Sequence[Query], *,
+                            multi_root: bool = True, block_size: int = 4096,
+                            backend: str = "xla",
+                            interpret: Optional[bool] = None,
+                            fuse_scans: bool = True,
+                            root_override: Optional[Dict[str, str]] = None,
+                            warm_rels: Sequence[str] = ()):
+        """Compile a query batch for incremental view maintenance: returns a
+        :class:`~repro.core.ivm.MaintainedBatch` whose ``init(db)``
+        materializes every view as persistent state and whose ``apply``
+        folds a :class:`~repro.data.relations.DeltaBatchUpdate` into that
+        state via per-relation delta programs (DESIGN.md §8).
+
+        Delta programs are derived lazily on first update of each relation
+        and cached; ``warm_rels`` pre-builds the programs for relations you
+        expect to stream updates for (e.g. the fact table), moving that
+        compile cost out of the first ``apply``."""
+        from repro.core.ivm import MaintainedBatch
+
+        batch = self.compile(queries, multi_root=multi_root,
+                             block_size=block_size, backend=backend,
+                             interpret=interpret, fuse_scans=fuse_scans,
+                             root_override=root_override)
+        mb = MaintainedBatch(batch)
+        for rel in warm_rels:
+            mb.delta_program(rel)
+        return mb

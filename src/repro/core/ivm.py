@@ -1,0 +1,415 @@
+"""Incremental view maintenance: delta programs over the materialized view DAG.
+
+``Engine.compile_incremental(queries)`` returns a :class:`MaintainedBatch`
+that keeps every view's dense accumulator as **persistent state** and, per
+base relation, derives a **delta program**: the sub-DAG of views transitively
+reachable from that relation, re-derived so that an update batch (inserts and
+deletes with signed multiplicities) is folded into the stored view tensors
+with work proportional to the update — not the database (DESIGN.md §8).
+
+Soundness for the engine's SUM-of-products aggregates, updating relation R:
+
+* every view is linear in the rows of its scanned relation, so a view
+  scanning R is maintained by running its *unchanged* scan program over the
+  delta tuples only, with per-row weights +1 (insert) / -1 (delete) folded
+  into the validity mask (``lowering/*.run_step(weights=...)``);
+* a view scanning S ≠ R sees R through **exactly one** child edge — join-tree
+  subtrees below distinct children are disjoint, so no product ever has two
+  R-dependent factors and the product rule collapses to first order:
+  ``Δ(terms × c_R × rest) = terms × Δc_R × rest`` with ``rest`` unchanged.
+  The delta view rescans S, gathering the child's *delta* array in place of
+  its materialized value; products with no R-dependent factor are dropped
+  (their delta is zero), and columns left empty contribute explicit zeros so
+  the column layout — which parents index by position — is preserved.
+
+Delta programs reuse the whole existing pipeline unchanged in the inner
+loop: view programs are built by ``ir.build_group_program`` from filtered
+``ViewDef``s, fused by ``schedule.build_schedule``, and executed by the
+batch's configured lowering backend (``xla`` or ``pallas``); a delta scan is
+just a scan over a smaller relation plus an in-place ``+=`` into view state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.groups import ViewGroup
+from repro.core.ir import StepProgram, build_programs, fuse_programs
+from repro.core.pushdown import AggColSpec, ViewDef
+from repro.core.schedule import build_schedule
+from repro.core.schema import DatabaseSchema
+from repro.data.relations import (Database, DeltaBatchUpdate, Relation,
+                                  check_delete_idx, check_update_columns)
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+# ----------------------------------------------------------- delta derivation
+
+def relation_reach(views: Mapping[int, ViewDef]) -> Dict[int, FrozenSet[str]]:
+    """vid → set of base relations its value depends on (scanned relation
+    plus, transitively, every child's).  Memoized walk over the view DAG."""
+    memo: Dict[int, FrozenSet[str]] = {}
+
+    def reach(vid: int) -> FrozenSet[str]:
+        if vid not in memo:
+            w = views[vid]
+            s = {w.rel}
+            for col in w.agg_cols:
+                for prod in col.products:
+                    for ref in prod.child_cols:
+                        s |= reach(ref.vid)
+            memo[vid] = frozenset(s)
+        return memo[vid]
+
+    for vid in views:
+        reach(vid)
+    return memo
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaStep:
+    """One fused scan step of a delta program.  ``scans_delta`` steps scan
+    the update's delta tuples (weighted); the rest rescan their full base
+    relation against child *deltas*."""
+
+    prog: StepProgram
+    rel: str
+    scans_delta: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaProgram:
+    """Compiled maintenance plan for updates to one base relation."""
+
+    rel: str
+    affected: FrozenSet[int]        # vids whose state the update changes
+    steps: Tuple[DeltaStep, ...]
+    base_rels: Tuple[str, ...]      # relations rescanned in full
+    state_vids: Tuple[int, ...]     # state entries the runner needs as input
+
+    @property
+    def n_scans(self) -> int:
+        return len(self.steps)
+
+    def summary(self) -> str:
+        return (f"Δ{self.rel}: {len(self.affected)} views, "
+                f"{self.n_scans} scans ({sum(s.scans_delta for s in self.steps)} delta, "
+                f"rescans {sorted(self.base_rels)})")
+
+
+def build_delta_program(schema: DatabaseSchema, views: Mapping[int, ViewDef],
+                        rel: str, fuse: bool = True) -> DeltaProgram:
+    """Derive the delta program for updates to base relation ``rel``."""
+    reach = relation_reach(views)
+    affected = frozenset(vid for vid, rs in reach.items() if rel in rs)
+    if not affected:
+        return DeltaProgram(rel=rel, affected=affected, steps=(),
+                            base_rels=(), state_vids=())
+
+    # delta view defs: tier-1 (scan rel) keep every product — they are linear
+    # in rel's rows; tier-2 keep only products with an affected child factor
+    delta_defs: Dict[int, ViewDef] = {}
+    for vid in affected:
+        w = views[vid]
+        if w.rel == rel:
+            delta_defs[vid] = w
+            continue
+        cols = []
+        for colspec in w.agg_cols:
+            kept = []
+            for p in colspec.products:
+                hit = [r for r in p.child_cols if r.vid in affected]
+                if not hit:
+                    continue            # R-independent product: delta is zero
+                if len(hit) > 1:
+                    # would need second-order delta terms; cannot happen for
+                    # join-tree pushdown (subtrees below distinct children
+                    # are disjoint), so treat it as a soundness bug
+                    raise ValueError(
+                        f"view {vid}: product with {len(hit)} {rel}-dependent "
+                        "factors — first-order delta derivation is unsound")
+                kept.append(p)
+            cols.append(AggColSpec(tuple(kept)))
+        delta_defs[vid] = ViewDef(
+            vid=w.vid, edge=w.edge, rel=w.rel, group_by=w.group_by,
+            local_keys=w.local_keys, pulled_keys=w.pulled_keys, agg_cols=cols)
+
+    # group the delta sub-DAG: peel dependency levels restricted to affected
+    # vids, bucketing ready views per scanned relation (mirrors group_views)
+    deps = {vid: {r.vid for col in delta_defs[vid].agg_cols
+                  for p in col.products for r in p.child_cols} & affected
+            for vid in affected}
+    groups: List[ViewGroup] = []
+    vid_group: Dict[int, int] = {}
+    remaining, done = set(affected), set()
+    level = 0
+    while remaining:
+        ready = sorted(v for v in remaining if deps[v] <= done)
+        if not ready:
+            raise ValueError("cyclic delta-view dependencies (bug)")
+        buckets: Dict[str, List[int]] = {}
+        for vid in ready:
+            buckets.setdefault(delta_defs[vid].rel, []).append(vid)
+        for r in sorted(buckets):
+            vids = tuple(buckets[r])
+            gdeps = sorted({vid_group[d] for vid in vids for d in deps[vid]})
+            gid = len(groups)
+            groups.append(ViewGroup(gid=gid, rel=r, vids=vids, level=level,
+                                    deps=tuple(gdeps)))
+            for vid in vids:
+                vid_group[vid] = gid
+        done.update(ready)
+        remaining.difference_update(ready)
+        level += 1
+
+    # lower through the existing IR builder + shared-scan scheduler; child
+    # gather specs only need the (unchanged) group_by of each child ViewDef
+    merged = dict(views)
+    merged.update(delta_defs)
+    progs = build_programs(schema, merged, groups)
+    sched = build_schedule(groups, fuse=fuse)
+    # a fused step scans one relation, so it is either all-delta (rel == R:
+    # every view scanning R is tier-1) or all-base — never mixed
+    steps = tuple(DeltaStep(prog=fuse_programs([progs[gid] for gid in st.gids]),
+                            rel=st.rel, scans_delta=(st.rel == rel))
+                  for st in sched.steps)
+    base_rels = tuple(sorted({s.rel for s in steps if not s.scans_delta}))
+    gathered = {gs.vid for s in steps for gs in s.prog.gathers}
+    return DeltaProgram(rel=rel, affected=affected, steps=steps,
+                        base_rels=base_rels,
+                        state_vids=tuple(sorted(affected | gathered)))
+
+
+# -------------------------------------------------------------- maintenance
+
+class MaintainedBatch:
+    """A compiled aggregate batch with materialized view state and per-base-
+    relation delta programs — ``Engine.compile_incremental``'s return type.
+
+        mb = eng.compile_incremental(queries)
+        mb.init(db)                              # full scan, state resident
+        mb.apply(update)                         # work ∝ |update|
+        results = mb.results()                   # {query: dense array}
+
+    Delta programs are derived lazily per updated relation and cached, as are
+    their jitted runners (keyed on padded delta size — deltas pad to the next
+    power of two with zero-weight rows, so a stream of varying batch sizes
+    compiles at most log₂ distinct executables per relation).
+    """
+
+    def __init__(self, batch):
+        self.batch = batch
+        self.plan = batch.plan
+        if self.plan.batched_params:
+            raise ValueError(
+                "incremental maintenance does not support param-batched "
+                f"plans (batched params: {sorted(self.plan.batched_params)})")
+        self.state: Optional[Dict[int, jnp.ndarray]] = None
+        self.step = 0
+        #: delta scan steps executed across all applied updates
+        self.n_delta_scan_steps = 0
+        self._relations: Optional[Dict[str, Relation]] = None
+        self._delta_programs: Dict[str, DeltaProgram] = {}
+        self._runners: Dict[Tuple, object] = {}
+        self._init_runners: Dict[Tuple, object] = {}
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @property
+    def db(self) -> Database:
+        """Current database snapshot (base relations after applied updates)."""
+        if self._relations is None:
+            raise ValueError("call init(db) first")
+        return Database(self.batch.schema, dict(self._relations))
+
+    def init(self, db: Database, params=None) -> Dict[str, jnp.ndarray]:
+        """Full recompute: materialize every view array as resident state."""
+        self._relations = dict(db.relations)
+        sizes = db.sizes()
+        params = dict(params or {})
+        key = (tuple(sorted(sizes.items())), tuple(sorted(params)))
+        if key not in self._init_runners:
+            run = self.plan.bind_arrays(sizes)
+            self._init_runners[key] = jax.jit(lambda c, p: run(c, p))
+        cols = {name: dict(r.columns) for name, r in db.relations.items()}
+        self.state = dict(self._init_runners[key](cols, params))
+        self.step = 0
+        return self.results()
+
+    def results(self) -> Dict[str, jnp.ndarray]:
+        """Query outputs read from the maintained state (no relation scans)."""
+        if self.state is None:
+            raise ValueError("call init(db) first")
+        return self.plan.extract_outputs(self.state)
+
+    # -- delta path ----------------------------------------------------------
+
+    def delta_program(self, rel: str) -> DeltaProgram:
+        """The (cached) maintenance plan for updates to ``rel``."""
+        if rel not in self._delta_programs:
+            self._delta_programs[rel] = build_delta_program(
+                self.batch.schema, self.plan.views, rel,
+                fuse=self.plan.config.fuse_scans)
+        return self._delta_programs[rel]
+
+    def apply(self, update: DeltaBatchUpdate, params=None) -> Dict[str, jnp.ndarray]:
+        """Fold an update batch into view state and the stored relations.
+
+        Relations are processed sequentially in sorted order; the resulting
+        state is exactly the state of ``init`` on the post-update database
+        (up to fp32 summation order)."""
+        if self.state is None:
+            raise ValueError("call init(db) first")
+        params = dict(params or {})
+        for rel in update.relations():
+            if rel not in self._relations:
+                raise ValueError(f"update targets unknown relation {rel!r}")
+            d = update.updates[rel]
+            # validate + cast exactly once per tick; the delta scan and the
+            # stored-relation update below both reuse the results
+            ins = (check_update_columns(self.batch.schema, rel, d.inserts)
+                   if d.n_inserts else None)
+            del_idx = (check_delete_idx(rel, d.delete_idx,
+                                        self._relations[rel].n_rows)
+                       if d.n_deletes else None)
+            dp = self.delta_program(rel)
+            if dp.steps:
+                delta_cols, weights = self._delta_relation(rel, ins, del_idx)
+                runner, args = self._runner(dp, len(weights), params)
+                new = runner(*args, delta_cols, weights, params)
+                self.state.update(new)
+                self.n_delta_scan_steps += dp.n_scans
+            self._apply_to_relation(rel, ins, del_idx)
+        self.step += 1
+        return self.results()
+
+    def _apply_to_relation(self, rel: str, ins, del_idx) -> None:
+        """Advance the stored relation (inputs already validated/cast)."""
+        cols = self._relations[rel].columns
+        if del_idx is not None:
+            keep = np.ones(self._relations[rel].n_rows, dtype=bool)
+            keep[del_idx] = False
+            cols = {a: jnp.asarray(np.asarray(c)[keep]) for a, c in cols.items()}
+        if ins is not None:
+            cols = {a: jnp.concatenate([c, ins[a]]) for a, c in cols.items()}
+        self._relations[rel] = Relation(rel, dict(cols))
+
+    def _delta_relation(self, rel: str, ins, del_idx):
+        """Delta tuples as a padded column dict + signed weight vector:
+        inserts (+1) ++ deleted rows gathered from the current relation (-1)
+        ++ zero-weight padding up to the next power of two."""
+        r = self._relations[rel]
+        n_ins = 0 if ins is None else int(next(iter(ins.values())).shape[0])
+        n_del = 0 if del_idx is None else len(del_idx)
+        parts: Dict[str, List[jnp.ndarray]] = {a: [] for a in r.columns}
+        if n_ins:
+            for a in parts:
+                parts[a].append(ins[a])
+        if n_del:
+            idx = jnp.asarray(del_idx.astype(np.int32))
+            for a in parts:
+                parts[a].append(r.columns[a][idx])
+        n = n_ins + n_del
+        n_pad = _pow2(max(n, 1))
+        cols = {}
+        for a, chunks in parts.items():
+            c = jnp.concatenate(chunks) if chunks else jnp.zeros(
+                (0,), r.columns[a].dtype)
+            if n_pad > n:
+                c = jnp.pad(c, (0, n_pad - n))
+            cols[a] = c
+        weights = jnp.concatenate([
+            jnp.ones((n_ins,), jnp.float32),
+            -jnp.ones((n_del,), jnp.float32),
+            jnp.zeros((n_pad - n,), jnp.float32)])
+        return cols, weights
+
+    def _runner(self, dp: DeltaProgram, n_pad: int, params):
+        """Jitted delta executor + its (state, base-columns, base-sizes)
+        arguments.  Rescanned base relations are padded to the next power of
+        two and their true row counts enter the trace as *dynamic* values,
+        so the jit cache grows log₂ with relation size — not one entry per
+        tick of a growing stream."""
+        base_pad = {r: _pow2(max(self._relations[r].n_rows, 1))
+                    for r in dp.base_rels}
+        key = (dp.rel, n_pad, tuple(sorted(base_pad.items())),
+               tuple(sorted(params)))
+        if key not in self._runners:
+            backend, cfg = self.plan.backend, self.plan.config
+
+            def run(state, base_cols, base_n, delta_cols, weights, p):
+                # arrays doubles as state reads (unaffected children) and
+                # delta writes: a step's finalize overwrites its vid, so a
+                # later gather of an affected child reads its *delta*
+                arrays = dict(state)
+                for st in dp.steps:
+                    if st.scans_delta:
+                        backend.run_step(st.prog, delta_cols, arrays, p,
+                                         n_valid=n_pad, offset=0, config=cfg,
+                                         weights=weights)
+                    else:
+                        backend.run_step(st.prog, base_cols[st.rel], arrays, p,
+                                         n_valid=base_n[st.rel], offset=0,
+                                         config=cfg)
+                return {vid: state[vid] + arrays[vid] for vid in dp.affected}
+
+            self._runners[key] = jax.jit(run)
+        base_cols = {}
+        base_n = {}
+        for r in dp.base_rels:
+            rel_ = self._relations[r]
+            pad = base_pad[r] - rel_.n_rows
+            base_cols[r] = {a: (jnp.pad(c, (0, pad)) if pad else c)
+                            for a, c in rel_.columns.items()}
+            base_n[r] = jnp.asarray(rel_.n_rows, jnp.int32)
+        state_in = {vid: self.state[vid] for vid in dp.state_vids}
+        return self._runners[key], (state_in, base_cols, base_n)
+
+    # -- snapshots (checkpoint/store.py hooks) -------------------------------
+
+    def state_skeleton(self):
+        """A pytree with the snapshot's structure (leaf values unused) —
+        lets ``restore`` run before ``init``."""
+        return {"step": 0,
+                "views": {f"v{vid:04d}": 0 for vid in sorted(self.plan.views)},
+                "relations": {name: {a: 0 for a in rs.attrs}
+                              for name, rs in self.batch.schema.relations.items()}}
+
+    def snapshot_state(self):
+        """Host pytree of the full maintained state: update counter, every
+        view tensor, and the current base relations."""
+        if self.state is None:
+            raise ValueError("call init(db) first")
+        return {"step": np.asarray(self.step, np.int64),
+                "views": {f"v{vid:04d}": np.asarray(a)
+                          for vid, a in sorted(self.state.items())},
+                "relations": {name: {a: np.asarray(c)
+                                     for a, c in r.columns.items()}
+                              for name, r in self._relations.items()}}
+
+    def load_state(self, tree) -> None:
+        self.step = int(np.asarray(tree["step"]))
+        self.state = {int(k[1:]): jnp.asarray(v)
+                      for k, v in tree["views"].items()}
+        self._relations = {
+            name: Relation(name, {a: jnp.asarray(c) for a, c in cols.items()})
+            for name, cols in tree["relations"].items()}
+
+    def save(self, ckpt_dir: str, keep: int = 3) -> str:
+        from repro.checkpoint import store
+        return store.save_view_state(ckpt_dir, self, keep=keep)
+
+    def restore(self, ckpt_dir: str, step: Optional[int] = None) -> int:
+        from repro.checkpoint import store
+        return store.restore_view_state(ckpt_dir, self, step=step)

@@ -130,15 +130,21 @@ def view_payload(vp: ViewProgram, cols: Cols,
                  valid: jnp.ndarray, n_rows: int,
                  n_nodes: Optional[int] = None) -> jnp.ndarray:
     """(B, *pulled_dims, n_aggs) contributions of a row block to view vp —
-    (N, B, *pulled_dims, n_aggs) for batched views."""
-    out_cols = [col_payload(cp, cols, gathered, params, n_rows)
-                * reshape_axes(valid, vp.pulled)
-                for cp in vp.cols]
+    (N, B, *pulled_dims, n_aggs) for batched views.  Columns with no
+    products contribute zeros (IVM delta views keep the full column layout
+    of their base view and zero out products the delta cannot reach)."""
     target = (n_rows,) + vp.pulled_dims
     if vp.batched:
         assert n_nodes is not None, f"view {vp.vid}: batched but n_nodes unset"
         target = (n_nodes,) + target
-    out_cols = [jnp.broadcast_to(c, target) for c in out_cols]
+    out_cols = []
+    for cp in vp.cols:
+        if cp.products:
+            c = (col_payload(cp, cols, gathered, params, n_rows)
+                 * reshape_axes(valid, vp.pulled))
+        else:
+            c = jnp.zeros(target, dtype=jnp.float32)
+        out_cols.append(jnp.broadcast_to(c, target))
     return jnp.stack(out_cols, axis=-1)
 
 

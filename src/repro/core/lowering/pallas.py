@@ -46,7 +46,11 @@ class PallasBackend:
 
     def run_step(self, prog: StepProgram, rel_cols: Mapping[str, jnp.ndarray],
                  arrays: Dict[int, jnp.ndarray], params: Params, *,
-                 n_valid: int, offset, config, n_nodes=None) -> None:
+                 n_valid: int, offset, config, n_nodes=None,
+                 weights=None) -> None:
+        """``weights`` (optional, (n_rows,) float) multiply each row's
+        contribution — signed multiplicities for IVM delta scans (+1 insert,
+        -1 delete, 0 padding).  ``None`` keeps the unweighted path."""
         from repro.kernels import ops
 
         interpret = _resolve_interpret(config)
@@ -59,6 +63,11 @@ class PallasBackend:
             pad = total - n_pad
             cp = jnp.pad(c, (0, pad)) if pad else c
             cols_blocked[a] = cp.reshape(n_blocks, B)
+        if weights is not None:
+            w = jnp.asarray(weights, dtype=jnp.float32)
+            pad = total - n_pad
+            w = jnp.pad(w, (0, pad)) if pad else w
+            cols_blocked["__row_weight__"] = w.reshape(n_blocks, B)
         iota = jnp.arange(n_blocks, dtype=jnp.int32)
 
         # static split: hist-pattern views, then general views bucketed by
@@ -99,11 +108,15 @@ class PallasBackend:
         def body(carry, xs):
             hist_accs, bucket_accs = carry
             blk_cols, blk_i = xs
+            blk_cols = dict(blk_cols)
+            w_blk = blk_cols.pop("__row_weight__", None)
             row_idx = blk_i * B + jnp.arange(B, dtype=jnp.int32)
             limit = jnp.minimum(jnp.asarray(n_pad, jnp.int32),
                                 jnp.asarray(n_valid, jnp.int32)
                                 - jnp.asarray(offset, jnp.int32))
             valid = (row_idx < limit).astype(jnp.float32)
+            if w_blk is not None:
+                valid = valid * w_blk
 
             gathered = common.gather_children(prog.gathers, blk_cols, arrays, B)
 

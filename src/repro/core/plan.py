@@ -95,33 +95,62 @@ class ExecutablePlan:
 
         def run(columns: Columns, params: Params, offsets: Optional[Mapping[str, jnp.ndarray]] = None,
                 psum_axes: Optional[Mapping[str, str]] = None):
-            offsets = offsets or {}
-            psum_axes = psum_axes or {}
-            arrays: Dict[int, jnp.ndarray] = {}
-            for step, prog in zip(self.schedule.steps, self.step_programs):
-                self.backend.run_step(
-                    prog, columns[step.rel], arrays, params,
-                    n_valid=n_rows[step.rel],
-                    offset=offsets.get(step.rel, 0), config=self.config,
-                    n_nodes=n_nodes)
-                if step.rel in psum_axes:
-                    for vid in step.vids:
-                        arrays[vid] = jax.lax.psum(arrays[vid],
-                                                   psum_axes[step.rel])
-            out = {}
-            for qname, qo in self.result.outputs.items():
-                arr = arrays[qo.vid]
-                cols = jnp.take(arr, jnp.asarray(qo.cols), axis=-1)
-                # canonical axis order -> user group-by order; a leading node
-                # axis (batched outputs) stays in front
-                lead = 1 if qo.vid in self.batched_vids else 0
-                perm = [qo.canonical_group_by.index(a) + lead
-                        for a in qo.query.group_by]
-                perm = list(range(lead)) + perm + [lead + len(qo.query.group_by)]
-                out[qname] = jnp.transpose(cols, perm)
-            return out
+            arrays = self._run_steps(columns, params, n_rows, n_nodes,
+                                     offsets, psum_axes)
+            return self.extract_outputs(arrays)
 
         return run
+
+    def bind_arrays(self, n_rows: Dict[str, int], n_nodes: Optional[int] = None):
+        """Like :meth:`bind`, but the returned fn yields *every* materialized
+        view array keyed by vid (not just query outputs) — the full-recompute
+        entry point of the IVM subsystem (``core/ivm.py``), which persists
+        these arrays as maintained state."""
+        n_rows = dict(n_rows)
+        if self.batched_params and n_nodes is None:
+            raise ValueError(
+                f"plan has batched params {sorted(self.batched_params)}; "
+                "bind with n_nodes")
+
+        def run(columns: Columns, params: Params):
+            return self._run_steps(columns, params, n_rows, n_nodes)
+
+        return run
+
+    def _run_steps(self, columns: Columns, params: Params,
+                   n_rows: Dict[str, int], n_nodes: Optional[int],
+                   offsets: Optional[Mapping[str, jnp.ndarray]] = None,
+                   psum_axes: Optional[Mapping[str, str]] = None) -> Dict[int, jnp.ndarray]:
+        offsets = offsets or {}
+        psum_axes = psum_axes or {}
+        arrays: Dict[int, jnp.ndarray] = {}
+        for step, prog in zip(self.schedule.steps, self.step_programs):
+            self.backend.run_step(
+                prog, columns[step.rel], arrays, params,
+                n_valid=n_rows[step.rel],
+                offset=offsets.get(step.rel, 0), config=self.config,
+                n_nodes=n_nodes)
+            if step.rel in psum_axes:
+                for vid in step.vids:
+                    arrays[vid] = jax.lax.psum(arrays[vid],
+                                               psum_axes[step.rel])
+        return arrays
+
+    def extract_outputs(self, arrays: Mapping[int, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        """Read query results out of view arrays (column select + transpose
+        from canonical to user group-by order)."""
+        out = {}
+        for qname, qo in self.result.outputs.items():
+            arr = arrays[qo.vid]
+            cols = jnp.take(arr, jnp.asarray(qo.cols), axis=-1)
+            # canonical axis order -> user group-by order; a leading node
+            # axis (batched outputs) stays in front
+            lead = 1 if qo.vid in self.batched_vids else 0
+            perm = [qo.canonical_group_by.index(a) + lead
+                    for a in qo.query.group_by]
+            perm = list(range(lead)) + perm + [lead + len(qo.query.group_by)]
+            out[qname] = jnp.transpose(cols, perm)
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,8 @@
 """Data substrate: columnar relations, synthetic schemas, LM token pipeline."""
 
-from repro.data.relations import Database, Relation, from_numpy, sort_by
+from repro.data.relations import (Database, DeltaBatchUpdate, Relation,
+                                  RelationDelta, apply_delta, from_numpy,
+                                  sort_by)
 
-__all__ = ["Database", "Relation", "from_numpy", "sort_by"]
+__all__ = ["Database", "DeltaBatchUpdate", "Relation", "RelationDelta",
+           "apply_delta", "from_numpy", "sort_by"]

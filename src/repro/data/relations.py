@@ -3,6 +3,13 @@
 Relations are dictionaries of same-length 1-D JAX arrays: int32 codes for
 key/categorical attributes, float32 for continuous ones.  This is the
 TPU-native analogue of LMFAO's sorted in-memory arrays of structs.
+
+Updates: :meth:`Relation.append` / :meth:`Relation.delete_rows` produce new
+relations (columns are immutable arrays), and :class:`DeltaBatchUpdate`
+bundles per-relation insert/delete batches — the unit consumed by the IVM
+subsystem (``core/ivm.py``) and by :func:`apply_delta`, which applies an
+update to a plain :class:`Database` (the from-scratch oracle the maintained
+path is tested against).
 """
 
 from __future__ import annotations
@@ -14,6 +21,58 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import schema as sch
+
+
+def check_update_columns(dbs: sch.DatabaseSchema, rel_name: str,
+                         columns: Mapping[str, np.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Validate + cast an insert batch for ``rel_name`` (dtype/domain checks
+    mirroring :meth:`Relation.validate`); returns engine-dtype jnp columns."""
+    rs = dbs.relation(rel_name)
+    if set(columns) != set(rs.attrs):
+        raise ValueError(
+            f"update for {rel_name!r}: columns {sorted(columns)} != schema {sorted(rs.attrs)}")
+    n = int(np.asarray(next(iter(columns.values()))).shape[0])
+    out: Dict[str, jnp.ndarray] = {}
+    for a in rs.attrs:
+        col = np.asarray(columns[a])
+        if col.shape != (n,):
+            raise ValueError(
+                f"update for {rel_name!r}: column {a!r} shape {col.shape} != ({n},)")
+        attr = dbs.attr(a)
+        if attr.is_discrete:
+            if not np.issubdtype(col.dtype, np.integer):
+                raise ValueError(
+                    f"{rel_name}.{a}: discrete update column must be integer, got {col.dtype}")
+            codes = col.astype(np.int32)
+            if codes.size and (codes.min() < 0 or codes.max() >= attr.domain):
+                raise ValueError(
+                    f"{rel_name}.{a}: update codes outside [0, {attr.domain}) "
+                    f"(min {codes.min()}, max {codes.max()})")
+            out[a] = jnp.asarray(codes)
+        else:
+            if not np.issubdtype(col.dtype, np.floating):
+                raise ValueError(
+                    f"{rel_name}.{a}: continuous update column must be float, got {col.dtype}")
+            out[a] = jnp.asarray(col.astype(np.float32))
+    return out
+
+
+def check_delete_idx(rel_name: str, idx: np.ndarray, n_rows: int) -> np.ndarray:
+    """Validate a positional delete batch: unique integer indices in
+    ``[0, n_rows)`` (shared by :meth:`Relation.delete_rows`,
+    :meth:`DeltaBatchUpdate.validate`, and the IVM apply path)."""
+    idx = np.asarray(idx)
+    if idx.size == 0:
+        return idx.reshape(0).astype(np.int64)
+    if not np.issubdtype(idx.dtype, np.integer):
+        raise ValueError(f"delete from {rel_name!r}: indices must be integer, got {idx.dtype}")
+    if idx.min() < 0 or idx.max() >= n_rows:
+        raise ValueError(
+            f"delete from {rel_name!r}: indices outside [0, {n_rows}) "
+            f"(min {idx.min()}, max {idx.max()})")
+    if len(np.unique(idx)) != len(idx):
+        raise ValueError(f"delete from {rel_name!r}: duplicate row indices")
+    return idx
 
 
 @dataclasses.dataclass
@@ -44,6 +103,44 @@ class Relation:
             else:
                 if not jnp.issubdtype(col.dtype, jnp.floating):
                     raise ValueError(f"{self.name}.{a}: continuous column must be float, got {col.dtype}")
+
+    def append(self, columns: Mapping[str, np.ndarray],
+               dbs: Optional[sch.DatabaseSchema] = None) -> "Relation":
+        """New relation with ``columns`` rows appended.  With a schema the
+        batch is validated and cast (:func:`check_update_columns`); without
+        one only column names/lengths/dtype kinds are checked."""
+        if dbs is not None:
+            cast = check_update_columns(dbs, self.name, columns)
+        else:
+            if set(columns) != set(self.columns):
+                raise ValueError(
+                    f"append to {self.name!r}: columns {sorted(columns)} != {sorted(self.columns)}")
+            n = int(np.asarray(next(iter(columns.values()))).shape[0])
+            cast = {}
+            for a, cur in self.columns.items():
+                col = jnp.asarray(np.asarray(columns[a]))
+                if col.shape != (n,):
+                    raise ValueError(
+                        f"append to {self.name!r}: column {a!r} shape {col.shape} != ({n},)")
+                if jnp.issubdtype(cur.dtype, jnp.integer) != jnp.issubdtype(col.dtype, jnp.integer):
+                    raise ValueError(
+                        f"append to {self.name}.{a}: dtype kind {col.dtype} != {cur.dtype}")
+                cast[a] = col.astype(cur.dtype)
+        return Relation(self.name, {a: jnp.concatenate([c, cast[a]])
+                                    for a, c in self.columns.items()})
+
+    def delete_rows(self, idx: np.ndarray) -> "Relation":
+        """New relation with the rows at positions ``idx`` removed.  Indices
+        must be unique and in ``[0, n_rows)`` — deletes are positional, so a
+        duplicate would silently delete fewer tuples than the delta scan
+        subtracts."""
+        idx = check_delete_idx(self.name, idx, self.n_rows)
+        if idx.size == 0:
+            return Relation(self.name, dict(self.columns))
+        keep = np.ones(self.n_rows, dtype=bool)
+        keep[idx] = False
+        return Relation(self.name, {a: jnp.asarray(np.asarray(c)[keep])
+                                    for a, c in self.columns.items()})
 
 
 @dataclasses.dataclass
@@ -96,3 +193,83 @@ def sort_by(rel: Relation, attrs: list) -> Relation:
     keys = [np.asarray(rel.columns[a]) for a in reversed(attrs)]
     order = np.lexsort(keys)
     return Relation(rel.name, {a: jnp.asarray(np.asarray(c)[order]) for a, c in rel.columns.items()})
+
+
+# --------------------------------------------------------------------- deltas
+
+@dataclasses.dataclass
+class RelationDelta:
+    """One relation's update batch: ``inserts`` are new rows (full column
+    dict), ``delete_idx`` are positional row indices into the relation *as it
+    was when the update was created*.  Either may be empty/None."""
+
+    inserts: Optional[Mapping[str, np.ndarray]] = None
+    delete_idx: Optional[np.ndarray] = None
+
+    @property
+    def n_inserts(self) -> int:
+        if not self.inserts:
+            return 0
+        return int(np.asarray(next(iter(self.inserts.values()))).shape[0])
+
+    @property
+    def n_deletes(self) -> int:
+        return 0 if self.delete_idx is None else int(np.asarray(self.delete_idx).shape[0])
+
+    @property
+    def n_rows(self) -> int:
+        return self.n_inserts + self.n_deletes
+
+
+@dataclasses.dataclass
+class DeltaBatchUpdate:
+    """A multi-relation update batch (the IVM unit of work): relation name →
+    :class:`RelationDelta`.  Relations are applied in sorted name order; the
+    post-update database equals applying every per-relation delta
+    sequentially, which is also how ``core/ivm.py`` maintains view state."""
+
+    updates: Dict[str, RelationDelta] = dataclasses.field(default_factory=dict)
+
+    def insert(self, rel: str, columns: Mapping[str, np.ndarray]) -> "DeltaBatchUpdate":
+        d = self.updates.setdefault(rel, RelationDelta())
+        if d.inserts is not None:
+            raise ValueError(f"update already has inserts for {rel!r}")
+        d.inserts = columns
+        return self
+
+    def delete(self, rel: str, idx: np.ndarray) -> "DeltaBatchUpdate":
+        d = self.updates.setdefault(rel, RelationDelta())
+        if d.delete_idx is not None:
+            raise ValueError(f"update already has deletes for {rel!r}")
+        d.delete_idx = np.asarray(idx)
+        return self
+
+    def relations(self):
+        """Updated relation names in application order (sorted, non-empty)."""
+        return [r for r in sorted(self.updates) if self.updates[r].n_rows > 0]
+
+    def validate(self, db: "Database") -> None:
+        for name, d in self.updates.items():
+            if name not in db.relations:
+                raise ValueError(f"update targets unknown relation {name!r}")
+            if d.inserts is not None:
+                check_update_columns(db.schema, name, d.inserts)
+            if d.delete_idx is not None:
+                check_delete_idx(name, d.delete_idx, db.relation(name).n_rows)
+
+
+def apply_delta(db: Database, update: DeltaBatchUpdate) -> Database:
+    """Apply an update batch to a plain database (deletes first, then
+    inserts, per relation in sorted order) — the from-scratch semantics the
+    maintained path in ``core/ivm.py`` must agree with."""
+    update.validate(db)
+    rels = dict(db.relations)
+    for name in update.relations():
+        d = update.updates[name]
+        r = rels[name]
+        if d.n_deletes:
+            r = r.delete_rows(np.asarray(d.delete_idx))
+        if d.n_inserts:
+            r = r.append(d.inserts, db.schema)
+        rels[name] = r
+    return Database(db.schema, rels)

@@ -2,14 +2,16 @@
 
 from repro.ml.chowliu import ChowLiuResult, chow_liu
 from repro.ml.covar import CovarLayout, assemble_covar, compute_covar, covar_queries
-from repro.ml.cubes import cube_queries, cube_rollup, cube_via_engine
+from repro.ml.cubes import StreamingCube, cube_queries, cube_rollup, cube_via_engine
 from repro.ml.forest import GradientBoostedTrees, RandomForest
+from repro.ml.online import OnlineRidge
 from repro.ml.polyreg import compute_poly_covar, fit_polyreg, predict_poly
 from repro.ml.ridge import RidgeResult, bgd, closed_form, rmse
 from repro.ml.trees import DecisionTree
 
 __all__ = ["ChowLiuResult", "chow_liu", "CovarLayout", "assemble_covar",
-           "compute_covar", "covar_queries", "cube_queries", "cube_rollup",
-           "cube_via_engine", "compute_poly_covar", "fit_polyreg",
-           "predict_poly", "RidgeResult", "bgd", "closed_form", "rmse",
-           "DecisionTree", "RandomForest", "GradientBoostedTrees"]
+           "compute_covar", "covar_queries", "StreamingCube", "cube_queries",
+           "cube_rollup", "cube_via_engine", "compute_poly_covar",
+           "fit_polyreg", "predict_poly", "OnlineRidge", "RidgeResult", "bgd",
+           "closed_form", "rmse", "DecisionTree", "RandomForest",
+           "GradientBoostedTrees"]

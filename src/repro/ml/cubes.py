@@ -1,12 +1,15 @@
 """Data cubes (paper §2, eq. (6)): 2^k group-by aggregates, v measures each.
 
-Two evaluation paths:
+Three evaluation paths:
   * ``cube_via_engine`` — all 2^k subset queries as one LMFAO batch (the
     paper's path; view merging shares the per-edge count views across cells);
   * ``cube_rollup`` — beyond-paper: compute only the finest cell with the
     engine, then roll coarser cells up the lattice by marginalizing axes
-    (classic Harinarayan-style reuse, exact for SUM measures).
-Tests assert both paths agree.
+    (classic Harinarayan-style reuse, exact for SUM measures);
+  * ``StreamingCube`` — incremental mode: every cell stays live under
+    insert/delete batches via the IVM subsystem (``core/ivm.py``), exact for
+    the SUM measures the cube is built from.
+Tests assert the paths agree.
 """
 
 from __future__ import annotations
@@ -18,6 +21,7 @@ import numpy as np
 
 from repro.core import Engine, query, sum_of
 from repro.data.datasets import Dataset
+from repro.data.relations import DeltaBatchUpdate
 
 
 def cube_name(subset: Sequence[str]) -> str:
@@ -40,6 +44,35 @@ def cube_via_engine(ds: Dataset, dims: Sequence[str], measures: Sequence[str],
     eng = engine or Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
     batch = eng.compile(qs, multi_root=multi_root, block_size=block_size)
     return {k: np.asarray(v, np.float64) for k, v in batch(ds.db).items()}
+
+
+class StreamingCube:
+    """All 2^k cube cells maintained incrementally under data changes.
+
+        cube = StreamingCube(ds, dims, measures)   # full scan once
+        cube.update(DeltaBatchUpdate().insert(...))
+        cube.cells()[cube_name(("city",))]
+
+    Queries are rooted at the fact table, so fact-only streams maintain every
+    cell by scanning just the delta tuples."""
+
+    def __init__(self, ds: Dataset, dims: Sequence[str], measures: Sequence[str],
+                 backend: str = "xla", interpret: Optional[bool] = None,
+                 block_size: int = 4096):
+        qs = cube_queries(dims, measures)
+        eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
+        self.maintained = eng.compile_incremental(
+            qs, backend=backend, interpret=interpret, block_size=block_size,
+            root_override={q.name: ds.fact for q in qs}, warm_rels=(ds.fact,))
+        self.maintained.init(ds.db)
+
+    def update(self, update: DeltaBatchUpdate) -> Dict[str, np.ndarray]:
+        self.maintained.apply(update)
+        return self.cells()
+
+    def cells(self) -> Dict[str, np.ndarray]:
+        return {k: np.asarray(v, np.float64)
+                for k, v in self.maintained.results().items()}
 
 
 def cube_rollup(ds: Dataset, dims: Sequence[str], measures: Sequence[str],

@@ -1,0 +1,315 @@
+"""IVM correctness: maintained view state must equal from-scratch
+recomputation after any sequence of insert/delete batches, on both lowering
+backends (deterministic sequences + a hypothesis property test), plus the
+update API validation, snapshot/restore, and the streaming ML applications."""
+
+import numpy as np
+import pytest
+
+try:  # optional dev dependency: only the property test needs it
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    st = None
+
+from repro.core import COUNT, Delta, Engine, Pow, Var, agg, query, schema, sum_of
+from repro.data import DeltaBatchUpdate, apply_delta, from_numpy
+
+BACKENDS = [("xla", None), ("pallas", True)]  # (backend, interpret)
+
+
+def chain_schema():
+    return schema(
+        [("x1", "categorical", 3), ("x2", "key", 4), ("x3", "key", 5),
+         ("x4", "categorical", 3), ("u", "continuous", 0)],
+        [("R1", ["x1", "x2"]), ("R2", ["x2", "x3", "u"]), ("R3", ["x3", "x4"])])
+
+
+def chain_db(seed=0, n1=17, n2=29, n3=13):
+    rng = np.random.default_rng(seed)
+    return {"R1": {"x1": rng.integers(0, 3, n1), "x2": rng.integers(0, 4, n1)},
+            "R2": {"x2": rng.integers(0, 4, n2), "x3": rng.integers(0, 5, n2),
+                   "u": rng.normal(size=n2).astype(np.float32)},
+            "R3": {"x3": rng.integers(0, 5, n3), "x4": rng.integers(0, 3, n3)}}
+
+
+QUERIES = [
+    query("q_count", [], [COUNT]),
+    query("q_sums", [], [sum_of("u"), agg(Pow("u", 2))]),
+    query("q_g1", ["x1"], [COUNT, sum_of("u")]),
+    query("q_g2", ["x1", "x4"], [COUNT]),
+    query("q_delta", ["x4"], [agg(Var("u"), Delta("x1", "==", 1))]),
+]
+
+_ROW_MAKERS = {
+    "R1": lambda rng, k: {"x1": rng.integers(0, 3, k), "x2": rng.integers(0, 4, k)},
+    "R2": lambda rng, k: {"x2": rng.integers(0, 4, k), "x3": rng.integers(0, 5, k),
+                          "u": rng.normal(size=k).astype(np.float32)},
+    "R3": lambda rng, k: {"x3": rng.integers(0, 5, k), "x4": rng.integers(0, 3, k)},
+}
+
+
+def rand_update(rng, sizes):
+    upd = DeltaBatchUpdate()
+    for rel in ["R1", "R2", "R3"]:
+        if rng.random() < 0.45:
+            upd.insert(rel, _ROW_MAKERS[rel](rng, int(rng.integers(1, 6))))
+        n = sizes[rel]
+        if n > 0 and rng.random() < 0.35:
+            k = int(rng.integers(1, min(n, 5) + 1))
+            upd.delete(rel, rng.choice(n, size=k, replace=False))
+    if not upd.relations():  # guarantee a non-trivial update
+        upd.insert("R2", _ROW_MAKERS["R2"](rng, 2))
+    return upd
+
+
+def assert_matches_scratch(mb, fresh_batch, db):
+    got = mb.results()
+    exp = fresh_batch(db)
+    for q in QUERIES:
+        np.testing.assert_allclose(np.asarray(got[q.name]),
+                                   np.asarray(exp[q.name]),
+                                   rtol=1e-3, atol=1e-3, err_msg=q.name)
+
+
+@pytest.mark.parametrize("backend,interpret", BACKENDS)
+def test_ivm_sequence_matches_scratch(backend, interpret):
+    """Fixed update sequence (every relation, inserts + deletes, including
+    emptying a relation): maintained results == fresh compile after every
+    step, on both backends."""
+    S = chain_schema()
+    db = from_numpy(S, chain_db())
+    eng = Engine(S, sizes=db.sizes())
+    mb = eng.compile_incremental(QUERIES, block_size=8, backend=backend,
+                                 interpret=interpret)
+    mb.init(db)
+    fresh = eng.compile(QUERIES, block_size=8, backend=backend,
+                        interpret=interpret)
+    rng = np.random.default_rng(3)
+    updates = [
+        # fact-ish update
+        DeltaBatchUpdate().insert("R2", _ROW_MAKERS["R2"](rng, 5))
+                          .delete("R2", np.array([0, 7, 11])),
+        # two relations at once
+        (DeltaBatchUpdate().insert("R1", _ROW_MAKERS["R1"](rng, 4))
+                           .delete("R3", np.array([2, 5]))),
+        # empty R3 entirely ...
+        DeltaBatchUpdate().delete("R3", np.arange(11)),
+        # ... and repopulate it
+        DeltaBatchUpdate().insert("R3", _ROW_MAKERS["R3"](rng, 6)),
+    ]
+    for upd in updates:
+        mb.apply(upd)
+        db = apply_delta(db, upd)
+        assert_matches_scratch(mb, fresh, db)
+    assert mb.step == len(updates)
+    assert mb.n_delta_scan_steps > 0
+
+
+def test_delta_program_structure():
+    """Delta programs cover exactly the reachable sub-DAG: a leaf-relation
+    update rescans downstream relations, and programs are cached."""
+    S = chain_schema()
+    db = from_numpy(S, chain_db())
+    eng = Engine(S, sizes=db.sizes())
+    mb = eng.compile_incremental(QUERIES)
+    dp = mb.delta_program("R2")
+    assert any(s.scans_delta for s in dp.steps)
+    assert all(s.rel == "R2" for s in dp.steps if s.scans_delta)
+    assert "R2" not in dp.base_rels
+    assert dp is mb.delta_program("R2")          # cached
+    # affected = views whose reach includes R2; all state inputs are known vids
+    assert set(dp.affected) <= set(mb.plan.views)
+    assert set(dp.affected) <= set(dp.state_vids)
+
+
+def test_runner_cache_bounded_under_growth():
+    """A growing stream must not retrace per tick: rescanned base relations
+    pad to pow2 with dynamic validity, so jit entries grow log₂ with size."""
+    S = chain_schema()
+    db = from_numpy(S, chain_db())
+    eng = Engine(S, sizes=db.sizes())
+    mb = eng.compile_incremental(QUERIES, block_size=8)
+    mb.init(db)
+    fresh = eng.compile(QUERIES, block_size=8)
+    rng = np.random.default_rng(1)
+    for _ in range(5):
+        # R2 grows every tick while R1's delta program rescans it; without
+        # padding this would be a fresh trace per apply
+        upd = (DeltaBatchUpdate().insert("R2", _ROW_MAKERS["R2"](rng, 3))
+               .insert("R1", _ROW_MAKERS["R1"](rng, 2)))
+        mb.apply(upd)
+        db = apply_delta(db, upd)
+    assert_matches_scratch(mb, fresh, db)
+    # R2 crosses one pow2 boundary (32→64) over the stream: ≤2 runners for
+    # R1's program + 1 for R2's — never one per tick
+    assert len(mb._runners) <= 4
+
+
+def test_apply_requires_init():
+    S = chain_schema()
+    db = from_numpy(S, chain_db())
+    eng = Engine(S, sizes=db.sizes())
+    mb = eng.compile_incremental(QUERIES)
+    with pytest.raises(ValueError, match="init"):
+        mb.apply(DeltaBatchUpdate().insert("R1", _ROW_MAKERS["R1"](
+            np.random.default_rng(0), 2)))
+
+
+def test_snapshot_restore_roundtrip(tmp_path):
+    """save → restore into a *fresh* MaintainedBatch (no init), then keep
+    applying updates; state and results must carry over exactly."""
+    S = chain_schema()
+    db = from_numpy(S, chain_db())
+    eng = Engine(S, sizes=db.sizes())
+    mb = eng.compile_incremental(QUERIES, block_size=8)
+    mb.init(db)
+    rng = np.random.default_rng(5)
+    upd = (DeltaBatchUpdate().insert("R2", _ROW_MAKERS["R2"](rng, 3))
+           .delete("R1", np.array([1])))
+    mb.apply(upd)
+    db = apply_delta(db, upd)
+    mb.save(str(tmp_path))
+
+    mb2 = eng.compile_incremental(QUERIES, block_size=8)
+    assert mb2.restore(str(tmp_path)) == 1
+    assert mb2.step == 1
+    r1, r2 = mb.results(), mb2.results()
+    for q in QUERIES:
+        np.testing.assert_allclose(np.asarray(r2[q.name]),
+                                   np.asarray(r1[q.name]), err_msg=q.name)
+    upd2 = DeltaBatchUpdate().insert("R3", _ROW_MAKERS["R3"](rng, 4))
+    mb2.apply(upd2)
+    db = apply_delta(db, upd2)
+    fresh = eng.compile(QUERIES, block_size=8)
+    assert_matches_scratch(mb2, fresh, db)
+
+
+# -- update API validation ----------------------------------------------------
+
+def test_append_delete_validation():
+    S = chain_schema()
+    db = from_numpy(S, chain_db())
+    r1 = db.relation("R1")
+    # happy paths
+    assert r1.append({"x1": np.array([1]), "x2": np.array([2])}, S).n_rows == 18
+    assert r1.delete_rows(np.array([0, 3])).n_rows == 15
+    # schema-checked append: out-of-domain code / wrong dtype kind / bad cols
+    with pytest.raises(ValueError, match="outside"):
+        r1.append({"x1": np.array([99]), "x2": np.array([0])}, S)
+    with pytest.raises(ValueError, match="integer"):
+        r1.append({"x1": np.array([0.5]), "x2": np.array([0])}, S)
+    with pytest.raises(ValueError, match="columns"):
+        r1.append({"x1": np.array([0])}, S)
+    with pytest.raises(ValueError, match="shape"):
+        r1.append({"x1": np.array([0, 1]), "x2": np.array([0])}, S)
+    # schema-less append still checks names/lengths/dtype kinds
+    with pytest.raises(ValueError, match="dtype"):
+        r1.append({"x1": np.array([0.5]), "x2": np.array([0])})
+    # deletes: duplicates / out of range
+    with pytest.raises(ValueError, match="duplicate"):
+        r1.delete_rows(np.array([1, 1]))
+    with pytest.raises(ValueError, match="outside"):
+        r1.delete_rows(np.array([99]))
+
+
+def test_delta_batch_update_validation():
+    S = chain_schema()
+    db = from_numpy(S, chain_db())
+    with pytest.raises(ValueError, match="unknown relation"):
+        apply_delta(db, DeltaBatchUpdate().insert(
+            "Nope", {"x1": np.array([0])}))
+    with pytest.raises(ValueError, match="outside"):
+        apply_delta(db, DeltaBatchUpdate().delete("R1", np.array([99])))
+    with pytest.raises(ValueError, match="already has inserts"):
+        (DeltaBatchUpdate().insert("R1", {}).insert("R1", {}))
+
+
+# -- hypothesis property test -------------------------------------------------
+
+if st is None:
+    def test_property_ivm_equals_scratch():
+        pytest.skip("hypothesis not installed (pip install .[dev])")
+else:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31), n_updates=st.integers(1, 3),
+           backend_i=st.integers(0, len(BACKENDS) - 1))
+    def test_property_ivm_equals_scratch(seed, n_updates, backend_i):
+        """Any random sequence of insert/delete batches yields results
+        allclose to compiling + running from scratch, on both backends."""
+        backend, interpret = BACKENDS[backend_i]
+        S = chain_schema()
+        db = from_numpy(S, chain_db(seed=seed % 97))
+        eng = Engine(S, sizes=db.sizes())
+        mb = eng.compile_incremental(QUERIES, block_size=8, backend=backend,
+                                     interpret=interpret)
+        mb.init(db)
+        fresh = eng.compile(QUERIES, block_size=8, backend=backend,
+                            interpret=interpret)
+        rng = np.random.default_rng(seed)
+        for _ in range(n_updates):
+            upd = rand_update(rng, db.sizes())
+            mb.apply(upd)
+            db = apply_delta(db, upd)
+            assert_matches_scratch(mb, fresh, db)
+
+
+# -- streaming ML applications ------------------------------------------------
+
+def test_online_ridge_matches_scratch():
+    """OnlineRidge under a fact insert/delete stream: maintained covar ==
+    fresh engine run on the updated database; fact updates must compile to
+    delta-only scans (the fast path the benchmark measures)."""
+    from repro.data import datasets as D
+    from repro.ml.online import OnlineRidge
+
+    ds = D.make("favorita", scale=0.02)
+    olr = OnlineRidge(ds, cont=["txns"], cat=["promo", "city", "stype"])
+    olr.fit()
+    dp = olr.maintained.delta_program(ds.fact)
+    assert all(s.scans_delta for s in dp.steps), \
+        "fact-rooted covar queries must maintain fact updates delta-only"
+
+    rng = np.random.default_rng(9)
+    fact = ds.tables[ds.fact]
+    n = ds.db.relation(ds.fact).n_rows
+    for _ in range(2):
+        pick = rng.integers(0, n, 30)
+        olr.update_fact(
+            inserts={a: np.asarray(c)[pick] for a, c in fact.items()},
+            delete_idx=rng.choice(n, 30, replace=False))
+    got = olr.maintained.results()
+    exp = olr.maintained.batch(olr.maintained.db)
+    for k in got:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(exp[k]),
+                                   rtol=2e-3, atol=0.5, err_msg=k)
+    assert olr.theta is not None and np.all(np.isfinite(olr.theta))
+
+
+def test_streaming_cube_matches_batch():
+    """StreamingCube cells after updates == cube_via_engine on the updated
+    dataset (SUM measures are exact under signed multiplicities)."""
+    from repro.data import datasets as D
+    from repro.ml.cubes import StreamingCube, cube_via_engine
+
+    ds = D.make("favorita", scale=0.02)
+    dims, measures = ["promo", "stype"], ["units"]
+    cube = StreamingCube(ds, dims, measures)
+    rng = np.random.default_rng(2)
+    fact = ds.tables[ds.fact]
+    n = ds.db.relation(ds.fact).n_rows
+    pick = rng.integers(0, n, 25)
+    cells = cube.update(DeltaBatchUpdate()
+                        .insert(ds.fact, {a: np.asarray(c)[pick]
+                                          for a, c in fact.items()})
+                        .delete(ds.fact, rng.choice(n, 25, replace=False)))
+
+    db2 = cube.maintained.db
+    ds2 = D.Dataset(ds.name, ds.schema,
+                    {nm: {a: np.asarray(c) for a, c in r.columns.items()}
+                     for nm, r in db2.relations.items()},
+                    ds.edges, ds.features_cont, ds.features_cat,
+                    ds.label, ds.fact)
+    exp = cube_via_engine(ds2, dims, measures)
+    for k in cells:
+        np.testing.assert_allclose(cells[k], exp[k], rtol=1e-3, atol=1e-2,
+                                   err_msg=k)
