@@ -7,6 +7,13 @@ compiled batch over the current database.  The delta path scans only the
 delta tuples (all covar queries root at the fact), so the gap is the
 engine's |update| vs |database| work ratio — the IVM promise.
 
+Also measures the device-residency win: a steady-state tick is one cached
+jit call (epoch-versioned resident state), versus the pre-resident
+baseline that round-tripped the stored fact relation through host numpy
+every tick.  Results land in ``JSON_PAYLOAD`` (retrace counts included),
+which ``benchmarks/run.py`` serializes to ``BENCH_ivm.json`` so CI records
+the perf trajectory.
+
     PYTHONPATH=src python -m benchmarks.bench_ivm
 """
 
@@ -16,9 +23,14 @@ import numpy as np
 
 from benchmarks.common import BENCH_SCALE, row, timeit
 from repro.data import datasets as D
+from repro.data import relations as relmod
 from repro.data.relations import DeltaBatchUpdate
 from repro.ml.cubes import StreamingCube, cube_name
 from repro.ml.online import OnlineRidge
+
+#: machine-readable results of the last ``main()`` run (benchmarks/run.py
+#: writes this out as BENCH_ivm.json)
+JSON_PAYLOAD: dict = {}
 
 
 def _fact_update(ds, rng, frac: float) -> DeltaBatchUpdate:
@@ -33,6 +45,8 @@ def _fact_update(ds, rng, frac: float) -> DeltaBatchUpdate:
 
 
 def main():
+    import jax
+
     ds = D.make("favorita", scale=BENCH_SCALE)
     rng = np.random.default_rng(11)
     lines = []
@@ -54,6 +68,31 @@ def main():
         f"rows={n_fact};scans={mb.batch.stats.n_scan_steps};"
         f"speedup={t_full / t_delta:.1f}x"))
 
+    # device residency: steady-state resident tick (one cached jit call,
+    # zero relation-column host transfers) vs the pre-resident baseline's
+    # per-tick host round-trip of the stored fact relation (delete-mask +
+    # concat on host numpy, then back to device)
+    def resident_tick():
+        mb.apply(_fact_update(ds, rng, 0.01))
+
+    def host_roundtrip_tick():
+        mb.apply(_fact_update(ds, rng, 0.01))
+        r = mb.db.relation(ds.fact)
+        cols = {a: np.asarray(c) for a, c in r.columns.items()}  # dev->host
+        jax.block_until_ready(jax.device_put(cols))              # host->dev
+
+    t_tick = timeit(resident_tick)           # timeit warms before measuring
+    traces0 = mb.n_fold_traces + relmod.advance_trace_count()
+    timeit(resident_tick)
+    retraces = mb.n_fold_traces + relmod.advance_trace_count() - traces0
+    t_tick_host = timeit(host_roundtrip_tick)
+    lines.append(row(
+        "ivm/tick_resident", t_tick,
+        f"epoch={mb.epoch};steady_retraces={retraces}"))
+    lines.append(row(
+        "ivm/tick_host_roundtrip", t_tick_host,
+        f"overhead={t_tick_host / t_tick:.2f}x"))
+
     # streaming cube: every 2^k cell live under the same update stream
     dims = ["promo", "city", "stype"]
     cube = StreamingCube(ds, dims, measures=["units"])
@@ -63,6 +102,21 @@ def main():
         "ivm/cube_delta_1pct", t_cube,
         f"cells={2 ** len(dims)};finest={cube_name(dims)}"))
 
+    JSON_PAYLOAD.clear()
+    JSON_PAYLOAD.update({
+        "dataset": "favorita", "scale": BENCH_SCALE,
+        "fact_rows": int(n_fact),
+        "update_rows": int(upd.updates[ds.fact].n_rows),
+        "delta_scans": int(dp.n_scans),
+        "tick_us_resident": t_tick * 1e6,
+        "tick_us_host_roundtrip": t_tick_host * 1e6,
+        "host_roundtrip_overhead_x": t_tick_host / t_tick,
+        "steady_state_retraces": int(retraces),
+        "full_recompute_us": t_full * 1e6,
+        "delta_us": t_delta * 1e6,
+        "speedup_delta_vs_full_x": t_full / t_delta,
+        "cube_tick_us": t_cube * 1e6,
+    })
     return lines
 
 

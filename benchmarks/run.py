@@ -1,11 +1,16 @@
 """Benchmark driver — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  BENCH_SCALE env (default 0.1)
-scales the synthetic datasets.
+scales the synthetic datasets.  The IVM module's machine-readable results
+(tick latency with/without host round-trips, retrace counts) are written to
+``BENCH_ivm.json`` (path overridable via the BENCH_IVM_JSON env var) so CI
+can archive the perf trajectory as an artifact.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
 
@@ -27,10 +32,15 @@ def main() -> None:
             print(f"{mod.__name__},0,FAILED", flush=True)
             traceback.print_exc()
 
+    if bench_ivm.JSON_PAYLOAD:
+        path = os.environ.get("BENCH_IVM_JSON", "BENCH_ivm.json")
+        with open(path, "w") as f:
+            json.dump(bench_ivm.JSON_PAYLOAD, f, indent=1, sort_keys=True)
+        print(f"# wrote {path}", file=sys.stderr)
+
     # dry-run + roofline tables (read from reports/, written by
     # repro.launch.dryrun --all and benchmarks.roofline)
     try:
-        import os
         if os.path.isdir("reports/dryrun"):
             from benchmarks import report_experiments
             print()

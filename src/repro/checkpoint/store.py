@@ -95,14 +95,23 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
 
 
 # --------------------------------------------------------------------------
-# IVM view-state snapshots (core/ivm.py): a MaintainedBatch's state — update
-# counter, every materialized view tensor, and the current base relations —
-# is a pytree, so it rides the same crash-safe store as train state.
+# IVM view-state snapshots (core/ivm.py): a MaintainedBatch's state — epoch
+# and update counters, every materialized view tensor, and the base
+# relations (trimmed to valid rows) — is a pytree, so it rides the same
+# crash-safe store as train state.
 # --------------------------------------------------------------------------
 
-def save_view_state(ckpt_dir: str, maintained, keep: int = 3) -> str:
-    """Snapshot a ``MaintainedBatch`` (its update counter names the step)."""
-    return save(ckpt_dir, maintained.step, maintained.snapshot_state(), keep=keep)
+def save_view_state(ckpt_dir: str, maintained, keep: int = 3,
+                    epoch: Optional[int] = None) -> str:
+    """Snapshot a ``MaintainedBatch`` (its update counter names the step).
+
+    The snapshot is epoch-atomic: ``snapshot_state`` resolves one immutable
+    :class:`~repro.core.ivm.EpochState` before serializing anything, so a
+    concurrent ``apply`` publishing mid-save cannot tear it.  Pass a pinned
+    ``epoch`` to checkpoint that exact version instead of whatever is
+    current at call time."""
+    tree = maintained.snapshot_state(epoch=epoch)
+    return save(ckpt_dir, int(np.asarray(tree["step"])), tree, keep=keep)
 
 
 def restore_view_state(ckpt_dir: str, maintained, step: Optional[int] = None) -> int:

@@ -67,6 +67,15 @@ class Term:
         """True if any referenced param carries the param-batch axis."""
         return any(p.batched for p in self.params())
 
+    def is_invertible(self) -> bool:
+        """True if the term's contribution can be *retracted*: deleting a
+        row must subtract exactly what inserting it added.  Every built-in
+        term is a per-row function folded by SUM, which commutes with signed
+        multiplicities — only UDAFs with MIN/MAX-style semantics (declared
+        via ``Lambda(invertible=False)``) break this, and the IVM subsystem
+        rejects them at ``compile_incremental`` time."""
+        return True
+
     def key(self) -> Tuple:
         """Structural identity for view merging/dedup."""
         raise NotImplementedError
@@ -179,12 +188,20 @@ class Lambda(Term):
     ``fn`` resolves; if any is ``batched``, ``fn`` must return its result
     with the node axis leading (e.g. ``jnp.take(params[p], x, axis=-1)``
     turns an ``(N, D)`` lookup table into an ``(N, *x.shape)`` output).
+
+    ``invertible=False`` declares MIN/MAX-style semantics: the UDAF's
+    aggregate cannot be maintained under deletions by signed
+    multiplicities (retracting a row would not subtract what inserting it
+    added), so ``Engine.compile_incremental`` rejects the query batch with
+    a clear error instead of silently producing wrong retractions.  The
+    batch (non-incremental) path is unaffected.
     """
 
     attr_order: Tuple[str, ...]
     fn: Callable
     tag: str = ""
     param_refs: Tuple[Param, ...] = ()
+    invertible: bool = True
 
     def attrs(self) -> FrozenSet[str]:
         return frozenset(self.attr_order)
@@ -195,9 +212,13 @@ class Lambda(Term):
     def params(self) -> Tuple[Param, ...]:
         return self.param_refs
 
+    def is_invertible(self) -> bool:
+        return self.invertible
+
     def key(self) -> Tuple:
         return ("lambda", self.attr_order, self.tag or id(self.fn),
-                tuple((p.name, p.batched) for p in self.param_refs))
+                tuple((p.name, p.batched) for p in self.param_refs),
+                self.invertible)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -247,8 +247,25 @@ class Engine:
         Delta programs are derived lazily on first update of each relation
         and cached; ``warm_rels`` pre-builds the programs for relations you
         expect to stream updates for (e.g. the fact table), moving that
-        compile cost out of the first ``apply``."""
+        compile cost out of the first ``apply``.
+
+        Rejects non-invertible (MIN/MAX-style) aggregates up front: signed
+        multiplicities maintain SUM-like aggregates only, and a silent wrong
+        retraction is far worse than a compile error."""
         from repro.core.ivm import MaintainedBatch
+
+        for q in queries:
+            for a in q.aggregates:
+                for prod in a.products:
+                    for t in prod.terms:
+                        if not t.is_invertible():
+                            raise ValueError(
+                                f"query {q.name!r}: aggregate term {t.key()!r} "
+                                "is not invertible under retraction (MIN/MAX-"
+                                "style UDAF) — incremental maintenance by "
+                                "signed multiplicities would produce wrong "
+                                "results on deletes; use Engine.compile for "
+                                "batch recomputation instead")
 
         batch = self.compile(queries, multi_root=multi_root,
                              block_size=block_size, backend=backend,

@@ -26,12 +26,26 @@ Delta programs reuse the whole existing pipeline unchanged in the inner
 loop: view programs are built by ``ir.build_group_program`` from filtered
 ``ViewDef``s, fused by ``schedule.build_schedule``, and executed by the
 batch's configured lowering backend (``xla`` or ``pallas``); a delta scan is
-just a scan over a smaller relation plus an in-place ``+=`` into view state.
+just a scan over a smaller relation plus a ``+=`` into view state.
+
+State is **epoch-versioned and device-resident** (DESIGN.md §8): every
+epoch is an immutable :class:`EpochState` — view tensors plus
+capacity-padded :class:`~repro.data.relations.ResidentRelation` buffers —
+and ``apply`` validates the whole update batch up front, folds deltas and
+advances relations *functionally* (JAX arrays are immutable, so the
+previous epoch doubles as the read buffer at zero copy cost), then
+publishes the next epoch with a single atomic reference swap.  Readers
+(``results``, ``serve/views.py``) resolve an epoch once and see a frozen
+snapshot; a failed batch publishes nothing and is a clean no-op.  A
+steady-state tick is one cached jit call per updated relation — no host
+round-trip of relation columns and no retrace.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import threading
 from typing import Dict, FrozenSet, List, Mapping, Optional, Tuple
 
 import jax
@@ -44,14 +58,11 @@ from repro.core.pushdown import AggColSpec, ViewDef
 from repro.core.schedule import build_schedule
 from repro.core.schema import DatabaseSchema
 from repro.data.relations import (Database, DeltaBatchUpdate, Relation,
-                                  check_delete_idx, check_update_columns)
+                                  ResidentRelation, _resident_advance,
+                                  check_delete_idx, check_update_columns,
+                                  next_pow2)
 
-
-def _pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
+_pow2 = next_pow2
 
 
 # ----------------------------------------------------------- delta derivation
@@ -193,19 +204,47 @@ def build_delta_program(schema: DatabaseSchema, views: Mapping[int, ViewDef],
 
 # -------------------------------------------------------------- maintenance
 
+@dataclasses.dataclass(frozen=True)
+class EpochState:
+    """One immutable published version of the maintained state: every view
+    tensor plus every base relation's device-resident buffers.  Epochs are
+    never mutated — ``apply`` builds the successor functionally and swaps a
+    single reference, so any number of readers holding (or pinning) an
+    epoch see a frozen, mutually consistent snapshot for free."""
+
+    epoch: int
+    step: int
+    views: Mapping[int, jnp.ndarray]
+    relations: Mapping[str, ResidentRelation]
+
+    def database(self, schema) -> Database:
+        return Database(schema, {name: rr.to_relation()
+                                 for name, rr in self.relations.items()})
+
+
 class MaintainedBatch:
-    """A compiled aggregate batch with materialized view state and per-base-
-    relation delta programs — ``Engine.compile_incremental``'s return type.
+    """A compiled aggregate batch with epoch-versioned, device-resident view
+    state and per-base-relation delta programs —
+    ``Engine.compile_incremental``'s return type.
 
         mb = eng.compile_incremental(queries)
-        mb.init(db)                              # full scan, state resident
-        mb.apply(update)                         # work ∝ |update|
-        results = mb.results()                   # {query: dense array}
+        mb.init(db)                     # full scan; state device-resident
+        mb.apply(update)                # work ∝ |update|; publishes epoch+1
+        results = mb.results()          # current epoch
+        e = mb.pin(); ... mb.results(epoch=e) ...; mb.unpin(e)
 
-    Delta programs are derived lazily per updated relation and cached, as are
-    their jitted runners (keyed on padded delta size — deltas pad to the next
-    power of two with zero-weight rows, so a stream of varying batch sizes
-    compiles at most log₂ distinct executables per relation).
+    ``apply`` is transactional: the **whole** update batch is validated
+    before anything folds, the fold itself only builds new arrays (one
+    cached jit call per updated relation: delta-tuple assembly, delta scans,
+    and the relation's scatter/compaction advance all fused), and the new
+    epoch becomes visible in a single atomic swap — so an invalid batch is
+    a clean no-op and readers never observe half-folded state.
+
+    Runners are cached on (relation, pad-bucket, capacity) keys — delta
+    batches pad to the next power of two with zero-weight rows and resident
+    buffers grow by doubling, so a stream of varying batch sizes against
+    growing relations compiles at most log₂ distinct executables per
+    relation and a steady-state tick retraces nothing.
     """
 
     def __init__(self, batch):
@@ -215,43 +254,125 @@ class MaintainedBatch:
             raise ValueError(
                 "incremental maintenance does not support param-batched "
                 f"plans (batched params: {sorted(self.plan.batched_params)})")
-        self.state: Optional[Dict[int, jnp.ndarray]] = None
-        self.step = 0
+        self._current: Optional[EpochState] = None
         #: delta scan steps executed across all applied updates
         self.n_delta_scan_steps = 0
-        self._relations: Optional[Dict[str, Relation]] = None
+        #: tick-runner traces (steady-state applies must not grow this)
+        self.n_fold_traces = 0
         self._delta_programs: Dict[str, DeltaProgram] = {}
         self._runners: Dict[Tuple, object] = {}
         self._init_runners: Dict[Tuple, object] = {}
+        self._extract = jax.jit(self.plan.extract_outputs)
+        self._pins: Dict[int, list] = {}          # epoch -> [EpochState, refs]
+        self._pin_lock = threading.Lock()
 
     # -- lifecycle -----------------------------------------------------------
 
+    def _require(self) -> EpochState:
+        es = self._current
+        if es is None:
+            raise ValueError("call init(db) first")
+        return es
+
+    @property
+    def epoch(self) -> int:
+        """Id of the currently published epoch."""
+        return self._require().epoch
+
+    @property
+    def step(self) -> int:
+        """Update batches applied since (or encoded in) the last init/restore."""
+        es = self._current
+        return es.step if es is not None else 0
+
+    @property
+    def state(self) -> Optional[Dict[int, jnp.ndarray]]:
+        """Current epoch's view tensors keyed by vid (back-compat read API)."""
+        es = self._current
+        return dict(es.views) if es is not None else None
+
     @property
     def db(self) -> Database:
-        """Current database snapshot (base relations after applied updates)."""
-        if self._relations is None:
-            raise ValueError("call init(db) first")
-        return Database(self.batch.schema, dict(self._relations))
+        """Current database snapshot (base relations after applied updates;
+        columns are lazy device slices of the resident buffers)."""
+        return self._require().database(self.batch.schema)
 
     def init(self, db: Database, params=None) -> Dict[str, jnp.ndarray]:
-        """Full recompute: materialize every view array as resident state."""
-        self._relations = dict(db.relations)
-        sizes = db.sizes()
+        """Full recompute: move every base relation into capacity-padded
+        device buffers and materialize every view array, then publish the
+        first epoch.  Re-init on a live batch publishes a fresh epoch (the
+        epoch clock keeps counting so pinned readers stay unambiguous)."""
+        rels = {name: ResidentRelation.from_relation(r)
+                for name, r in db.relations.items()}
         params = dict(params or {})
-        key = (tuple(sorted(sizes.items())), tuple(sorted(params)))
+        caps = {name: rr.capacity for name, rr in rels.items()}
+        key = (tuple(sorted(caps.items())), tuple(sorted(params)))
         if key not in self._init_runners:
-            run = self.plan.bind_arrays(sizes)
-            self._init_runners[key] = jax.jit(lambda c, p: run(c, p))
-        cols = {name: dict(r.columns) for name, r in db.relations.items()}
-        self.state = dict(self._init_runners[key](cols, params))
-        self.step = 0
+            run = self.plan.bind_arrays(caps)
+            self._init_runners[key] = jax.jit(
+                lambda c, p, nv: run(c, p, n_valid=nv))
+        cols = {name: dict(rr.buffers) for name, rr in rels.items()}
+        n_valid = {name: rr.n_valid_dev for name, rr in rels.items()}
+        views = dict(self._init_runners[key](cols, params, n_valid))
+        prev = self._current
+        self._current = EpochState(epoch=prev.epoch + 1 if prev else 0,
+                                   step=0, views=views, relations=rels)
         return self.results()
 
-    def results(self) -> Dict[str, jnp.ndarray]:
-        """Query outputs read from the maintained state (no relation scans)."""
-        if self.state is None:
-            raise ValueError("call init(db) first")
-        return self.plan.extract_outputs(self.state)
+    def epoch_state(self, epoch: Optional[int] = None) -> EpochState:
+        """Resolve an epoch to its immutable state: the published epoch by
+        default, or a previously pinned one."""
+        es = self._require()
+        if epoch is None or epoch == es.epoch:
+            return es
+        with self._pin_lock:
+            ent = self._pins.get(epoch)
+            if ent is not None:
+                return ent[0]
+        raise KeyError(
+            f"epoch {epoch} is neither current ({es.epoch}) nor pinned — "
+            "pin() an epoch before reading it across updates")
+
+    def results(self, epoch: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+        """Query outputs read from one epoch's state (no relation scans).
+        Always snapshot-consistent: every output comes from the same epoch,
+        regardless of concurrently folding updates."""
+        return dict(self._extract(dict(self.epoch_state(epoch).views)))
+
+    # -- epoch pinning (serve/views.py) --------------------------------------
+
+    def pin(self) -> int:
+        """Retain the current epoch for consistent reads across updates;
+        returns its id.  Balance every pin with :meth:`unpin` — the epoch's
+        device arrays stay alive while pinned."""
+        es = self._require()
+        with self._pin_lock:
+            ent = self._pins.setdefault(es.epoch, [es, 0])
+            ent[1] += 1
+        return es.epoch
+
+    def unpin(self, epoch: int) -> None:
+        with self._pin_lock:
+            ent = self._pins.get(epoch)
+            if ent is None:
+                raise KeyError(f"epoch {epoch} is not pinned")
+            ent[1] -= 1
+            if ent[1] <= 0:
+                del self._pins[epoch]
+
+    @contextlib.contextmanager
+    def pinned(self):
+        """``with mb.pinned() as epoch:`` — pin for the block's duration."""
+        epoch = self.pin()
+        try:
+            yield epoch
+        finally:
+            self.unpin(epoch)
+
+    @property
+    def n_pinned_epochs(self) -> int:
+        with self._pin_lock:
+            return len(self._pins)
 
     # -- delta path ----------------------------------------------------------
 
@@ -264,151 +385,181 @@ class MaintainedBatch:
         return self._delta_programs[rel]
 
     def apply(self, update: DeltaBatchUpdate, params=None) -> Dict[str, jnp.ndarray]:
-        """Fold an update batch into view state and the stored relations.
+        """Fold an update batch into view state and the resident relations,
+        publishing the next epoch.  Relations are processed sequentially in
+        sorted order; the published state is exactly ``init`` on the
+        post-update database (up to fp32 summation order).
 
-        Relations are processed sequentially in sorted order; the resulting
-        state is exactly the state of ``init`` on the post-update database
-        (up to fp32 summation order)."""
-        if self.state is None:
-            raise ValueError("call init(db) first")
+        Transactional: *every* relation's delta is validated before any
+        state folds, so a rejected batch raises without publishing and the
+        current epoch is untouched.  Thread safety: any number of readers
+        may overlap with one ``apply``; concurrent writers need external
+        serialization (``serve.views.ViewServer`` provides it)."""
+        cur = self._require()
         params = dict(params or {})
+
+        # phase 1 — validate the whole batch against the current epoch
+        # (host-side numpy on the update only; state untouched)
+        prepared = []
         for rel in update.relations():
-            if rel not in self._relations:
+            if rel not in cur.relations:
                 raise ValueError(f"update targets unknown relation {rel!r}")
+            rr = cur.relations[rel]
             d = update.updates[rel]
-            # validate + cast exactly once per tick; the delta scan and the
-            # stored-relation update below both reuse the results
             ins = (check_update_columns(self.batch.schema, rel, d.inserts)
                    if d.n_inserts else None)
-            del_idx = (check_delete_idx(rel, d.delete_idx,
-                                        self._relations[rel].n_rows)
+            del_idx = (check_delete_idx(rel, d.delete_idx, rr.n_valid)
                        if d.n_deletes else None)
+            prepared.append((rel, ins, del_idx))
+
+        # phase 2 — functional fold: new arrays only, current epoch readable
+        # throughout; the update's columns cross to the device exactly once
+        # (explicit device_put), relation columns never cross back
+        views = dict(cur.views)
+        rels = dict(cur.relations)
+        n_scans = 0
+        for rel, ins, del_idx in prepared:
+            rr = rels[rel]
+            n_ins = 0 if ins is None else int(next(iter(ins.values())).shape[0])
+            n_del = 0 if del_idx is None else len(del_idx)
+            ins_pad = _pow2(n_ins) if n_ins else 0
+            del_pad = _pow2(n_del) if n_del else 0
+            ins_dev = {a: jax.device_put(np.pad(c, (0, ins_pad - n_ins)))
+                       for a, c in (ins or {}).items()}
+            # delete pads point past the valid region: harmless for the
+            # compaction scatter, zero-filled by the delta gather
+            del_dev = jax.device_put(
+                np.pad(del_idx.astype(np.int32), (0, del_pad - n_del),
+                       constant_values=rr.capacity)
+                if n_del else np.zeros((0,), np.int32))
+            rr = rr.grown(rr.n_valid - n_del + n_ins)
+            rels[rel] = rr
             dp = self.delta_program(rel)
             if dp.steps:
-                delta_cols, weights = self._delta_relation(rel, ins, del_idx)
-                runner, args = self._runner(dp, len(weights), params)
-                new = runner(*args, delta_cols, weights, params)
-                self.state.update(new)
-                self.n_delta_scan_steps += dp.n_scans
-            self._apply_to_relation(rel, ins, del_idx)
-        self.step += 1
+                n_ins_dev = jax.device_put(np.asarray(n_ins, np.int32))
+                n_del_dev = jax.device_put(np.asarray(n_del, np.int32))
+                runner = self._tick_runner(dp, rr.capacity, ins_pad, del_pad,
+                                           rels, params)
+                state_in = {vid: views[vid] for vid in dp.state_vids}
+                base_cols = {r: dict(rels[r].buffers) for r in dp.base_rels}
+                base_n = {r: rels[r].n_valid_dev for r in dp.base_rels}
+                new_views, bufs, n_valid_dev = runner(
+                    state_in, dict(rr.buffers), rr.n_valid_dev, base_cols,
+                    base_n, ins_dev, del_dev, n_ins_dev, n_del_dev, params)
+                views.update(new_views)
+                rels[rel] = ResidentRelation(rel, bufs,
+                                             rr.n_valid - n_del + n_ins,
+                                             n_valid_dev)
+                n_scans += dp.n_scans
+            else:
+                rels[rel] = rr.advance(ins_dev, del_dev, n_ins, n_del)
+
+        # phase 3 — atomic publish
+        self._current = EpochState(epoch=cur.epoch + 1, step=cur.step + 1,
+                                   views=views, relations=rels)
+        self.n_delta_scan_steps += n_scans
         return self.results()
 
-    def _apply_to_relation(self, rel: str, ins, del_idx) -> None:
-        """Advance the stored relation (inputs already validated/cast)."""
-        cols = self._relations[rel].columns
-        if del_idx is not None:
-            keep = np.ones(self._relations[rel].n_rows, dtype=bool)
-            keep[del_idx] = False
-            cols = {a: jnp.asarray(np.asarray(c)[keep]) for a, c in cols.items()}
-        if ins is not None:
-            cols = {a: jnp.concatenate([c, ins[a]]) for a, c in cols.items()}
-        self._relations[rel] = Relation(rel, dict(cols))
+    def _tick_runner(self, dp: DeltaProgram, cap: int, ins_pad: int,
+                     del_pad: int, rels: Mapping[str, ResidentRelation],
+                     params):
+        """One jitted device program for a whole relation tick: assemble the
+        delta tuples ([insert block | deleted-row gather block], pads carry
+        weight 0), run the delta scans, add into view state, and advance the
+        relation's resident buffers — so a steady-state ``apply`` is a
+        single cached dispatch with no host transfer of relation columns.
 
-    def _delta_relation(self, rel: str, ins, del_idx):
-        """Delta tuples as a padded column dict + signed weight vector:
-        inserts (+1) ++ deleted rows gathered from the current relation (-1)
-        ++ zero-weight padding up to the next power of two."""
-        r = self._relations[rel]
-        n_ins = 0 if ins is None else int(next(iter(ins.values())).shape[0])
-        n_del = 0 if del_idx is None else len(del_idx)
-        parts: Dict[str, List[jnp.ndarray]] = {a: [] for a in r.columns}
-        if n_ins:
-            for a in parts:
-                parts[a].append(ins[a])
-        if n_del:
-            idx = jnp.asarray(del_idx.astype(np.int32))
-            for a in parts:
-                parts[a].append(r.columns[a][idx])
-        n = n_ins + n_del
-        n_pad = _pow2(max(n, 1))
-        cols = {}
-        for a, chunks in parts.items():
-            c = jnp.concatenate(chunks) if chunks else jnp.zeros(
-                (0,), r.columns[a].dtype)
-            if n_pad > n:
-                c = jnp.pad(c, (0, n_pad - n))
-            cols[a] = c
-        weights = jnp.concatenate([
-            jnp.ones((n_ins,), jnp.float32),
-            -jnp.ones((n_del,), jnp.float32),
-            jnp.zeros((n_pad - n,), jnp.float32)])
-        return cols, weights
+        Cache key: (relation, pad buckets, own + rescanned capacities) —
+        true row counts and delta sizes enter as traced scalars."""
+        base_caps = {r: rels[r].capacity for r in dp.base_rels}
+        key = (dp.rel, cap, ins_pad, del_pad,
+               tuple(sorted(base_caps.items())), tuple(sorted(params)))
+        if key in self._runners:
+            return self._runners[key]
+        backend, cfg = self.plan.backend, self.plan.config
+        n_delta = ins_pad + del_pad
 
-    def _runner(self, dp: DeltaProgram, n_pad: int, params):
-        """Jitted delta executor + its (state, base-columns, base-sizes)
-        arguments.  Rescanned base relations are padded to the next power of
-        two and their true row counts enter the trace as *dynamic* values,
-        so the jit cache grows log₂ with relation size — not one entry per
-        tick of a growing stream."""
-        base_pad = {r: _pow2(max(self._relations[r].n_rows, 1))
-                    for r in dp.base_rels}
-        key = (dp.rel, n_pad, tuple(sorted(base_pad.items())),
-               tuple(sorted(params)))
-        if key not in self._runners:
-            backend, cfg = self.plan.backend, self.plan.config
+        def run(state, rel_bufs, rel_n, base_cols, base_n, ins, del_idx,
+                n_ins, n_del, p):
+            self.n_fold_traces += 1   # python side effect: counts traces only
+            delta_cols = {}
+            for a, buf in rel_bufs.items():
+                segs = []
+                if ins_pad:
+                    segs.append(ins[a].astype(buf.dtype))
+                if del_pad:
+                    segs.append(jnp.take(buf, del_idx, mode="fill",
+                                         fill_value=0))
+                delta_cols[a] = (jnp.concatenate(segs) if len(segs) > 1
+                                 else segs[0])
+            w = []
+            if ins_pad:
+                w.append((jnp.arange(ins_pad) < n_ins).astype(jnp.float32))
+            if del_pad:
+                w.append(-(jnp.arange(del_pad) < n_del).astype(jnp.float32))
+            weights = jnp.concatenate(w) if len(w) > 1 else w[0]
+            # arrays doubles as state reads (unaffected children) and delta
+            # writes: a step's finalize overwrites its vid, so a later
+            # gather of an affected child reads its *delta*
+            arrays = dict(state)
+            for st in dp.steps:
+                if st.scans_delta:
+                    backend.run_step(st.prog, delta_cols, arrays, p,
+                                     n_valid=n_delta, offset=0, config=cfg,
+                                     weights=weights)
+                else:
+                    backend.run_step(st.prog, base_cols[st.rel], arrays, p,
+                                     n_valid=base_n[st.rel], offset=0,
+                                     config=cfg)
+            new_views = {vid: state[vid] + arrays[vid] for vid in dp.affected}
+            new_bufs, new_n = _resident_advance(
+                rel_bufs, rel_n, ins, del_idx, n_ins, n_del,
+                compact=bool(del_pad))
+            return new_views, new_bufs, new_n
 
-            def run(state, base_cols, base_n, delta_cols, weights, p):
-                # arrays doubles as state reads (unaffected children) and
-                # delta writes: a step's finalize overwrites its vid, so a
-                # later gather of an affected child reads its *delta*
-                arrays = dict(state)
-                for st in dp.steps:
-                    if st.scans_delta:
-                        backend.run_step(st.prog, delta_cols, arrays, p,
-                                         n_valid=n_pad, offset=0, config=cfg,
-                                         weights=weights)
-                    else:
-                        backend.run_step(st.prog, base_cols[st.rel], arrays, p,
-                                         n_valid=base_n[st.rel], offset=0,
-                                         config=cfg)
-                return {vid: state[vid] + arrays[vid] for vid in dp.affected}
-
-            self._runners[key] = jax.jit(run)
-        base_cols = {}
-        base_n = {}
-        for r in dp.base_rels:
-            rel_ = self._relations[r]
-            pad = base_pad[r] - rel_.n_rows
-            base_cols[r] = {a: (jnp.pad(c, (0, pad)) if pad else c)
-                            for a, c in rel_.columns.items()}
-            base_n[r] = jnp.asarray(rel_.n_rows, jnp.int32)
-        state_in = {vid: self.state[vid] for vid in dp.state_vids}
-        return self._runners[key], (state_in, base_cols, base_n)
+        self._runners[key] = jax.jit(run)
+        return self._runners[key]
 
     # -- snapshots (checkpoint/store.py hooks) -------------------------------
 
     def state_skeleton(self):
         """A pytree with the snapshot's structure (leaf values unused) —
         lets ``restore`` run before ``init``."""
-        return {"step": 0,
+        return {"epoch": 0, "step": 0,
                 "views": {f"v{vid:04d}": 0 for vid in sorted(self.plan.views)},
                 "relations": {name: {a: 0 for a in rs.attrs}
                               for name, rs in self.batch.schema.relations.items()}}
 
-    def snapshot_state(self):
-        """Host pytree of the full maintained state: update counter, every
-        view tensor, and the current base relations."""
-        if self.state is None:
-            raise ValueError("call init(db) first")
-        return {"step": np.asarray(self.step, np.int64),
+    def snapshot_state(self, epoch: Optional[int] = None):
+        """Host pytree of one epoch's full maintained state: epoch/update
+        counters, every view tensor, and the base relations trimmed to their
+        valid rows.  Resolving the epoch up front makes the snapshot
+        atomic — a concurrent ``apply`` publishing mid-serialization cannot
+        tear it, and passing a pinned ``epoch`` checkpoints that exact
+        version."""
+        es = self.epoch_state(epoch)
+        return {"epoch": np.asarray(es.epoch, np.int64),
+                "step": np.asarray(es.step, np.int64),
                 "views": {f"v{vid:04d}": np.asarray(a)
-                          for vid, a in sorted(self.state.items())},
-                "relations": {name: {a: np.asarray(c)
-                                     for a, c in r.columns.items()}
-                              for name, r in self._relations.items()}}
+                          for vid, a in sorted(es.views.items())},
+                "relations": {name: {a: np.asarray(c) for a, c in
+                                     rr.to_relation().columns.items()}
+                              for name, rr in es.relations.items()}}
 
     def load_state(self, tree) -> None:
-        self.step = int(np.asarray(tree["step"]))
-        self.state = {int(k[1:]): jnp.asarray(v)
-                      for k, v in tree["views"].items()}
-        self._relations = {
-            name: Relation(name, {a: jnp.asarray(c) for a, c in cols.items()})
-            for name, cols in tree["relations"].items()}
+        views = {int(k[1:]): jnp.asarray(v)
+                 for k, v in tree["views"].items()}
+        rels = {name: ResidentRelation.from_relation(
+                    Relation(name, {a: jnp.asarray(c) for a, c in cols.items()}))
+                for name, cols in tree["relations"].items()}
+        self._current = EpochState(epoch=int(np.asarray(tree["epoch"])),
+                                   step=int(np.asarray(tree["step"])),
+                                   views=views, relations=rels)
 
-    def save(self, ckpt_dir: str, keep: int = 3) -> str:
+    def save(self, ckpt_dir: str, keep: int = 3,
+             epoch: Optional[int] = None) -> str:
         from repro.checkpoint import store
-        return store.save_view_state(ckpt_dir, self, keep=keep)
+        return store.save_view_state(ckpt_dir, self, keep=keep, epoch=epoch)
 
     def restore(self, ckpt_dir: str, step: Optional[int] = None) -> int:
         from repro.checkpoint import store

@@ -27,6 +27,51 @@ from repro.core.ir import (ColProgram, GatherSpec, ProductProgram,
 
 Cols = Mapping[str, jnp.ndarray]
 
+#: synthetic column carrying per-row signed multiplicities through the
+#: blocked scan (IVM delta weights ride the same xs pytree as real columns)
+ROW_WEIGHT = "__row_weight__"
+
+
+def block_columns(rel_cols: Cols, weights: Optional[jnp.ndarray],
+                  block_size: int):
+    """Reshape relation columns (and optional row weights) into scan blocks:
+    returns ``(cols_blocked, iota, B, n_pad)`` where every column becomes
+    ``(n_blocks, B)`` and ``iota`` indexes blocks.  Shared by both backends —
+    the scan strategy differs below this split, the blocking does not."""
+    n_pad = int(next(iter(rel_cols.values())).shape[0])
+    B = min(block_size, max(n_pad, 1))
+    n_blocks = max(-(-n_pad // B), 1)
+    total = n_blocks * B
+    pad = total - n_pad
+    cols_blocked = {a: (jnp.pad(c, (0, pad)) if pad else c).reshape(n_blocks, B)
+                    for a, c in rel_cols.items()}
+    if weights is not None:
+        w = jnp.asarray(weights, dtype=jnp.float32)
+        cols_blocked[ROW_WEIGHT] = (jnp.pad(w, (0, pad)) if pad else
+                                    w).reshape(n_blocks, B)
+    iota = jnp.arange(n_blocks, dtype=jnp.int32)
+    return cols_blocked, iota, B, n_pad
+
+
+def block_validity(blk_cols: Dict[str, jnp.ndarray], blk_i: jnp.ndarray,
+                   B: int, n_pad: int, n_valid, offset):
+    """Per-row validity of one scan block: inside both the local (possibly
+    capacity-padded) partition and the global ``[offset, offset+n_valid)``
+    window, times the signed row weight if present.  ``n_valid`` and
+    ``offset`` may be Python ints *or traced scalars* — device-resident
+    relations pass their dynamic valid-row count here, which is what keeps
+    steady-state IVM ticks retrace-free while buffers stay capacity-shaped.
+    Pops the weight column; returns ``(blk_cols, valid)``."""
+    w_blk = blk_cols.pop(ROW_WEIGHT, None)
+    row_idx = blk_i * B + jnp.arange(B, dtype=jnp.int32)
+    limit = jnp.minimum(jnp.asarray(n_pad, jnp.int32),
+                        jnp.asarray(n_valid, jnp.int32)
+                        - jnp.asarray(offset, jnp.int32))
+    valid = (row_idx < limit).astype(jnp.float32)
+    if w_blk is not None:
+        valid = valid * w_blk
+    return blk_cols, valid
+
 
 def align(x: jnp.ndarray, src_axes: Tuple[str, ...],
           dst_axes: Tuple[str, ...], lead: int = 1) -> jnp.ndarray:

@@ -26,7 +26,6 @@ import jax.numpy as jnp
 from repro.core.aggregates import Params
 from repro.core.ir import StepProgram, ViewProgram
 from repro.core.lowering import common
-from repro.core.lowering.xla import _ceil_to
 
 
 def _resolve_interpret(config) -> bool:
@@ -46,29 +45,18 @@ class PallasBackend:
 
     def run_step(self, prog: StepProgram, rel_cols: Mapping[str, jnp.ndarray],
                  arrays: Dict[int, jnp.ndarray], params: Params, *,
-                 n_valid: int, offset, config, n_nodes=None,
+                 n_valid, offset, config, n_nodes=None,
                  weights=None) -> None:
         """``weights`` (optional, (n_rows,) float) multiply each row's
         contribution — signed multiplicities for IVM delta scans (+1 insert,
-        -1 delete, 0 padding).  ``None`` keeps the unweighted path."""
+        -1 delete, 0 padding).  ``None`` keeps the unweighted path.
+        ``n_valid``/``offset`` may be Python ints or traced scalars (dynamic
+        valid-row counts of capacity-padded resident relations)."""
         from repro.kernels import ops
 
         interpret = _resolve_interpret(config)
-        n_pad = int(next(iter(rel_cols.values())).shape[0])
-        B = min(config.block_size, max(n_pad, 1))
-        n_blocks = max(_ceil_to(n_pad, B) // B, 1)
-        total = n_blocks * B
-        cols_blocked = {}
-        for a, c in rel_cols.items():
-            pad = total - n_pad
-            cp = jnp.pad(c, (0, pad)) if pad else c
-            cols_blocked[a] = cp.reshape(n_blocks, B)
-        if weights is not None:
-            w = jnp.asarray(weights, dtype=jnp.float32)
-            pad = total - n_pad
-            w = jnp.pad(w, (0, pad)) if pad else w
-            cols_blocked["__row_weight__"] = w.reshape(n_blocks, B)
-        iota = jnp.arange(n_blocks, dtype=jnp.int32)
+        cols_blocked, iota, B, n_pad = common.block_columns(
+            rel_cols, weights, config.block_size)
 
         # static split: hist-pattern views, then general views bucketed by
         # their local segment key so one seg_aggregate launch per block
@@ -108,15 +96,8 @@ class PallasBackend:
         def body(carry, xs):
             hist_accs, bucket_accs = carry
             blk_cols, blk_i = xs
-            blk_cols = dict(blk_cols)
-            w_blk = blk_cols.pop("__row_weight__", None)
-            row_idx = blk_i * B + jnp.arange(B, dtype=jnp.int32)
-            limit = jnp.minimum(jnp.asarray(n_pad, jnp.int32),
-                                jnp.asarray(n_valid, jnp.int32)
-                                - jnp.asarray(offset, jnp.int32))
-            valid = (row_idx < limit).astype(jnp.float32)
-            if w_blk is not None:
-                valid = valid * w_blk
+            blk_cols, valid = common.block_validity(
+                dict(blk_cols), blk_i, B, n_pad, n_valid, offset)
 
             gathered = common.gather_children(prog.gathers, blk_cols, arrays, B)
 

@@ -21,10 +21,6 @@ from repro.core.ir import StepProgram
 from repro.core.lowering import common
 
 
-def _ceil_to(n: int, m: int) -> int:
-    return ((n + m - 1) // m) * m
-
-
 class XlaBackend:
     """Lowers one scan step to a blocked ``lax.scan`` over the relation."""
 
@@ -32,27 +28,15 @@ class XlaBackend:
 
     def run_step(self, prog: StepProgram, rel_cols: Mapping[str, jnp.ndarray],
                  arrays: Dict[int, jnp.ndarray], params: Params, *,
-                 n_valid: int, offset, config, n_nodes=None,
+                 n_valid, offset, config, n_nodes=None,
                  weights=None) -> None:
         """``weights`` (optional, (n_rows,) float) multiply each row's
         contribution — signed multiplicities for IVM delta scans (+1 insert,
-        -1 delete, 0 padding).  ``None`` keeps the unweighted path."""
-        n_pad = int(next(iter(rel_cols.values())).shape[0])
-        B = min(config.block_size, max(n_pad, 1))
-        n_blocks = max(_ceil_to(n_pad, B) // B, 1)
-
-        total = n_blocks * B
-        cols_blocked = {}
-        for a, c in rel_cols.items():
-            pad = total - n_pad
-            cp = jnp.pad(c, (0, pad)) if pad else c
-            cols_blocked[a] = cp.reshape(n_blocks, B)
-        if weights is not None:
-            w = jnp.asarray(weights, dtype=jnp.float32)
-            pad = total - n_pad
-            w = jnp.pad(w, (0, pad)) if pad else w
-            cols_blocked["__row_weight__"] = w.reshape(n_blocks, B)
-        iota = jnp.arange(n_blocks, dtype=jnp.int32)
+        -1 delete, 0 padding).  ``None`` keeps the unweighted path.
+        ``n_valid``/``offset`` may be Python ints or traced scalars (dynamic
+        valid-row counts of capacity-padded resident relations)."""
+        cols_blocked, iota, B, n_pad = common.block_columns(
+            rel_cols, weights, config.block_size)
 
         # batched views carry the param-batch (node) axis in front: one
         # relation pass accumulates all N parameter settings at once
@@ -63,17 +47,8 @@ class XlaBackend:
         def body(carry, xs):
             accs = carry
             blk_cols, blk_i = xs
-            blk_cols = dict(blk_cols)
-            w_blk = blk_cols.pop("__row_weight__", None)
-            # local row index within this shard's (possibly padded) partition;
-            # valid iff inside both the local partition and the global window
-            row_idx = blk_i * B + jnp.arange(B, dtype=jnp.int32)
-            limit = jnp.minimum(jnp.asarray(n_pad, jnp.int32),
-                                jnp.asarray(n_valid, jnp.int32)
-                                - jnp.asarray(offset, jnp.int32))
-            valid = (row_idx < limit).astype(jnp.float32)
-            if w_blk is not None:
-                valid = valid * w_blk
+            blk_cols, valid = common.block_validity(
+                dict(blk_cols), blk_i, B, n_pad, n_valid, offset)
 
             gathered = common.gather_children(prog.gathers, blk_cols, arrays, B)
 

@@ -105,15 +105,26 @@ class ExecutablePlan:
         """Like :meth:`bind`, but the returned fn yields *every* materialized
         view array keyed by vid (not just query outputs) — the full-recompute
         entry point of the IVM subsystem (``core/ivm.py``), which persists
-        these arrays as maintained state."""
+        these arrays as maintained state.
+
+        ``n_rows`` fixes the *column lengths* (static shapes).  The optional
+        ``n_valid`` argument of the returned fn overrides per-relation valid
+        row counts with **traced scalars** — how capacity-padded resident
+        relations scan only their live prefix: the executable is keyed on
+        buffer capacity while the row count stays a runtime value, so a
+        growing stream retraces log2 times, not per tick."""
         n_rows = dict(n_rows)
         if self.batched_params and n_nodes is None:
             raise ValueError(
                 f"plan has batched params {sorted(self.batched_params)}; "
                 "bind with n_nodes")
 
-        def run(columns: Columns, params: Params):
-            return self._run_steps(columns, params, n_rows, n_nodes)
+        def run(columns: Columns, params: Params,
+                n_valid: Optional[Mapping[str, jnp.ndarray]] = None):
+            nv = dict(n_rows)
+            if n_valid:
+                nv.update(n_valid)
+            return self._run_steps(columns, params, nv, n_nodes)
 
         return run
 

@@ -1,8 +1,8 @@
 """Data substrate: columnar relations, synthetic schemas, LM token pipeline."""
 
 from repro.data.relations import (Database, DeltaBatchUpdate, Relation,
-                                  RelationDelta, apply_delta, from_numpy,
-                                  sort_by)
+                                  RelationDelta, ResidentRelation,
+                                  apply_delta, from_numpy, sort_by)
 
 __all__ = ["Database", "DeltaBatchUpdate", "Relation", "RelationDelta",
-           "apply_delta", "from_numpy", "sort_by"]
+           "ResidentRelation", "apply_delta", "from_numpy", "sort_by"]

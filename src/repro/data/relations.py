@@ -10,29 +10,47 @@ bundles per-relation insert/delete batches — the unit consumed by the IVM
 subsystem (``core/ivm.py``) and by :func:`apply_delta`, which applies an
 update to a plain :class:`Database` (the from-scratch oracle the maintained
 path is tested against).
+
+:class:`ResidentRelation` is the device-resident representation the IVM
+subsystem stores between ticks: capacity-padded (power-of-two) column
+buffers plus a dynamic valid-row count — the same static-shape-plus-validity
+scheme the scan backends use for row blocks — so appends and deletes are
+on-device scatter/compaction ops and a steady-state maintenance tick never
+round-trips relation columns through host numpy.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Mapping, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import schema as sch
 
 
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
 def check_update_columns(dbs: sch.DatabaseSchema, rel_name: str,
-                         columns: Mapping[str, np.ndarray]) -> Dict[str, jnp.ndarray]:
+                         columns: Mapping[str, np.ndarray]) -> Dict[str, np.ndarray]:
     """Validate + cast an insert batch for ``rel_name`` (dtype/domain checks
-    mirroring :meth:`Relation.validate`); returns engine-dtype jnp columns."""
+    mirroring :meth:`Relation.validate`); returns engine-dtype *host numpy*
+    columns — callers decide when the batch crosses to the device (the IVM
+    tick pads on the host first, then does one explicit ``device_put``)."""
     rs = dbs.relation(rel_name)
     if set(columns) != set(rs.attrs):
         raise ValueError(
             f"update for {rel_name!r}: columns {sorted(columns)} != schema {sorted(rs.attrs)}")
     n = int(np.asarray(next(iter(columns.values()))).shape[0])
-    out: Dict[str, jnp.ndarray] = {}
+    out: Dict[str, np.ndarray] = {}
     for a in rs.attrs:
         col = np.asarray(columns[a])
         if col.shape != (n,):
@@ -48,12 +66,12 @@ def check_update_columns(dbs: sch.DatabaseSchema, rel_name: str,
                 raise ValueError(
                     f"{rel_name}.{a}: update codes outside [0, {attr.domain}) "
                     f"(min {codes.min()}, max {codes.max()})")
-            out[a] = jnp.asarray(codes)
+            out[a] = codes
         else:
             if not np.issubdtype(col.dtype, np.floating):
                 raise ValueError(
                     f"{rel_name}.{a}: continuous update column must be float, got {col.dtype}")
-            out[a] = jnp.asarray(col.astype(np.float32))
+            out[a] = col.astype(np.float32)
     return out
 
 
@@ -107,8 +125,13 @@ class Relation:
     def append(self, columns: Mapping[str, np.ndarray],
                dbs: Optional[sch.DatabaseSchema] = None) -> "Relation":
         """New relation with ``columns`` rows appended.  With a schema the
-        batch is validated and cast (:func:`check_update_columns`); without
-        one only column names/lengths/dtype kinds are checked."""
+        batch is validated and cast (:func:`check_update_columns`).  Without
+        one, appending to a discrete (integer) column is an error: the
+        attribute's code domain is unreachable, so out-of-range codes could
+        not be bounds-checked here and would be *silently dropped* by the
+        downstream ``segment_sum`` — corrupting aggregates instead of
+        failing loudly.  Schema-less appends therefore only accept
+        all-continuous relations (names/lengths/dtype kinds still checked)."""
         if dbs is not None:
             cast = check_update_columns(dbs, self.name, columns)
         else:
@@ -118,15 +141,20 @@ class Relation:
             n = int(np.asarray(next(iter(columns.values()))).shape[0])
             cast = {}
             for a, cur in self.columns.items():
-                col = jnp.asarray(np.asarray(columns[a]))
+                col = np.asarray(columns[a])
                 if col.shape != (n,):
                     raise ValueError(
                         f"append to {self.name!r}: column {a!r} shape {col.shape} != ({n},)")
-                if jnp.issubdtype(cur.dtype, jnp.integer) != jnp.issubdtype(col.dtype, jnp.integer):
+                if jnp.issubdtype(cur.dtype, jnp.integer) != np.issubdtype(col.dtype, np.integer):
                     raise ValueError(
                         f"append to {self.name}.{a}: dtype kind {col.dtype} != {cur.dtype}")
+                if jnp.issubdtype(cur.dtype, jnp.integer):
+                    raise ValueError(
+                        f"append to {self.name}.{a}: discrete column codes cannot "
+                        "be bounds-checked without a schema (out-of-range codes "
+                        "would silently corrupt aggregates); pass dbs=")
                 cast[a] = col.astype(cur.dtype)
-        return Relation(self.name, {a: jnp.concatenate([c, cast[a]])
+        return Relation(self.name, {a: jnp.concatenate([c, jnp.asarray(cast[a])])
                                     for a, c in self.columns.items()})
 
     def delete_rows(self, idx: np.ndarray) -> "Relation":
@@ -193,6 +221,117 @@ def sort_by(rel: Relation, attrs: list) -> Relation:
     keys = [np.asarray(rel.columns[a]) for a in reversed(attrs)]
     order = np.lexsort(keys)
     return Relation(rel.name, {a: jnp.asarray(np.asarray(c)[order]) for a, c in rel.columns.items()})
+
+
+# ------------------------------------------------------- device residency
+
+#: traces of the resident-advance program (steady-state ticks must not grow
+#: this; `benchmarks/bench_ivm.py` and tests read it as a retrace counter)
+_ADVANCE_TRACES = 0
+
+
+def advance_trace_count() -> int:
+    return _ADVANCE_TRACES
+
+
+@functools.partial(jax.jit, static_argnames=("compact",))
+def _resident_advance(buffers, n_valid, ins, del_idx, n_ins, n_del, *,
+                      compact: bool):
+    """Device-side relation tick: delete ``del_idx`` rows (order-preserving
+    compaction of the valid prefix), then append ``ins`` at the new end.
+
+    Shapes are static — ``buffers`` are capacity-length, ``ins`` columns and
+    ``del_idx`` are pow2-padded (pads: arbitrary rows / the capacity
+    sentinel) — while ``n_valid``/``n_ins``/``n_del`` are traced scalars, so
+    a steady-state stream of varying batch sizes reuses one executable per
+    (capacity, pad-bucket) and never retraces or touches the host."""
+    global _ADVANCE_TRACES
+    _ADVANCE_TRACES += 1
+    cap = next(iter(buffers.values())).shape[0]
+    if compact:
+        rows = jnp.arange(cap, dtype=jnp.int32)
+        deleted = jnp.zeros((cap,), bool).at[del_idx].set(True, mode="drop")
+        # stable argsort floats kept-valid rows to the front in original
+        # order — the same sequential semantics as the host oracle's
+        # boolean-mask delete (apply_delta)
+        order = jnp.argsort(deleted | (rows >= n_valid))
+        buffers = {a: c[order] for a, c in buffers.items()}
+    n_after = n_valid - n_del
+    out = {}
+    for a, col in buffers.items():
+        ia = ins.get(a)
+        if ia is not None and ia.shape[0]:
+            pos = n_after + jnp.arange(ia.shape[0], dtype=jnp.int32)
+            # pad rows land past the valid region (garbage zone) or drop OOB
+            col = col.at[pos].set(ia.astype(col.dtype), mode="drop")
+        out[a] = col
+    return out, n_after + n_ins
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidentRelation:
+    """A relation pinned on device: power-of-two *capacity* column buffers
+    plus a valid-row count carried twice — ``n_valid`` as a host mirror
+    (drives capacity/retrace bookkeeping without device syncs) and
+    ``n_valid_dev`` as a device scalar (flows into jitted scans as a traced
+    validity bound, mirroring the scan blocks' ``n_valid`` machinery).
+
+    Rows ``[0, n_valid)`` are live and ordered exactly like the equivalent
+    host :class:`Relation`; rows beyond are garbage hidden by validity
+    masks.  All update ops are functional — buffers are never mutated, so a
+    published epoch's relations stay readable while the next tick builds."""
+
+    name: str
+    buffers: Dict[str, jnp.ndarray]
+    n_valid: int
+    n_valid_dev: jnp.ndarray
+
+    @property
+    def capacity(self) -> int:
+        return int(next(iter(self.buffers.values())).shape[0])
+
+    @classmethod
+    def from_relation(cls, rel: Relation, min_capacity: int = 1) -> "ResidentRelation":
+        n = rel.n_rows
+        cap = next_pow2(max(n, min_capacity, 1))
+        bufs = {a: jnp.pad(c, (0, cap - n)) if cap > n else c
+                for a, c in rel.columns.items()}
+        return cls(rel.name, bufs, n,
+                   jax.device_put(np.asarray(n, np.int32)))
+
+    def to_relation(self) -> Relation:
+        """Trimmed plain relation (a lazy device slice — host transfer only
+        happens if the caller materializes the columns)."""
+        return Relation(self.name, {a: c[:self.n_valid]
+                                    for a, c in self.buffers.items()})
+
+    def grown(self, min_rows: int) -> "ResidentRelation":
+        """Same relation with capacity >= ``min_rows`` (pow2 doubling, so a
+        growing stream re-keys downstream executables only log2 times)."""
+        cap = next_pow2(max(min_rows, 1))
+        if cap <= self.capacity:
+            return self
+        bufs = {a: jnp.pad(c, (0, cap - self.capacity))
+                for a, c in self.buffers.items()}
+        return ResidentRelation(self.name, bufs, self.n_valid, self.n_valid_dev)
+
+    def advance(self, ins: Optional[Mapping[str, jnp.ndarray]],
+                del_idx: Optional[jnp.ndarray],
+                n_ins: int, n_del: int) -> "ResidentRelation":
+        """Functional update: delete then append, all on device.  ``ins``
+        columns and ``del_idx`` must already be pow2-padded device arrays
+        (see ``core/ivm.py``'s prepare step); ``n_ins``/``n_del`` are the
+        true counts (host ints — they update the host mirror and enter the
+        device program through ``device_put``, an explicit transfer)."""
+        grown = self.grown(self.n_valid - n_del + n_ins)
+        bufs, n_valid_dev = _resident_advance(
+            grown.buffers, grown.n_valid_dev, dict(ins or {}),
+            del_idx if del_idx is not None else jnp.zeros((0,), jnp.int32),
+            jax.device_put(np.asarray(n_ins, np.int32)),
+            jax.device_put(np.asarray(n_del, np.int32)),
+            compact=bool(n_del))
+        return ResidentRelation(self.name, bufs,
+                                self.n_valid - n_del + n_ins, n_valid_dev)
 
 
 # --------------------------------------------------------------------- deltas

@@ -1,1 +1,14 @@
-"""serve substrate."""
+"""Serving layer.
+
+``views.py`` — the aggregate engine's serving front end: epoch-pinned,
+snapshot-consistent reads over incrementally maintained views
+(:class:`~repro.serve.views.ViewServer`), the piece that turns the engine
+into a long-lived service under concurrent reads and update streams.
+
+``engine.py`` — the LM decode loop retained from the model-serving seed
+(batched greedy decoding; used by ``examples/serve_lm.py``).
+"""
+
+from repro.serve.views import EpochView, ViewServer
+
+__all__ = ["EpochView", "ViewServer"]

@@ -1,0 +1,138 @@
+"""Snapshot-consistent serving over maintained aggregate views.
+
+:class:`ViewServer` is the aggregate engine's serving front end: it wraps a
+:class:`~repro.core.ivm.MaintainedBatch` and gives every request a *pinned
+epoch* — an immutable version of the whole view state — so concurrent
+readers always see mutually consistent aggregates while update batches fold
+in behind them (DESIGN.md §8).  This is what lets the engine sit under live
+analytics traffic instead of running as a batch job:
+
+    srv = ViewServer(eng.compile_incremental(queries))
+    srv.start(db)                         # full scan, publishes epoch 0
+    with srv.snapshot() as snap:          # reader: frozen epoch
+        a = snap.results()["q_count"]
+        ...                               # writer may publish e+1 here
+        b = snap.results()["q_count"]     # still epoch e: a == b, always
+    srv.apply(update)                     # writer: validates, folds, swaps
+
+Reads never block writes and writes never block reads — epochs are
+immutable device arrays, so a "read lock" is just a reference.  Writers are
+serialized by the server's write lock (the maintained batch is
+single-writer by contract).  ``checkpoint()`` snapshots a pinned epoch
+through the crash-safe store, so a checkpoint taken mid-update-stream is a
+clean version, not a torn mix.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.data.relations import DeltaBatchUpdate
+
+
+class EpochView:
+    """A reader's handle on one pinned epoch (create via
+    ``ViewServer.snapshot()``).  All reads through one handle come from the
+    same immutable state, no matter how many updates publish meanwhile."""
+
+    def __init__(self, maintained, epoch: int):
+        self._mb = maintained
+        self.epoch = epoch
+        self._results: Optional[Dict[str, jnp.ndarray]] = None
+
+    def results(self) -> Dict[str, jnp.ndarray]:
+        # the epoch is immutable, so one extraction serves every read
+        # through this handle
+        if self._results is None:
+            self._results = self._mb.results(epoch=self.epoch)
+        return self._results
+
+    def __getitem__(self, query_name: str) -> jnp.ndarray:
+        return self.results()[query_name]
+
+
+class ViewServer:
+    """Concurrent read/update front end for a ``MaintainedBatch``.
+
+    Semantics: ``apply`` is transactional (whole batch validated before any
+    fold; failure publishes nothing) and serialized across threads; reads
+    are wait-free against writers and pin their epoch for as long as the
+    snapshot handle lives."""
+
+    def __init__(self, maintained):
+        self.maintained = maintained
+        self._write_lock = threading.Lock()
+        self.n_reads = 0
+        self.n_updates = 0
+        self.n_rejected_updates = 0
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self, db, params=None) -> int:
+        """Full scan; publishes the first epoch and returns its id."""
+        with self._write_lock:
+            self.maintained.init(db, params=params)
+            return self.maintained.epoch
+
+    @property
+    def epoch(self) -> int:
+        return self.maintained.epoch
+
+    # -- read path -----------------------------------------------------------
+
+    def snapshot(self):
+        """``with srv.snapshot() as snap:`` — pin the current epoch for the
+        block; ``snap.results()`` is frozen at that version."""
+        server = self
+
+        class _Pin:
+            def __enter__(pin):
+                pin._epoch = server.maintained.pin()
+                server.n_reads += 1
+                return EpochView(server.maintained, pin._epoch)
+
+            def __exit__(pin, *exc):
+                server.maintained.unpin(pin._epoch)
+                return False
+
+        return _Pin()
+
+    def read(self, query_name: Optional[str] = None):
+        """One-shot consistent read at the current epoch (pin, read, unpin).
+        Returns the full results dict, or one query's array."""
+        with self.snapshot() as snap:
+            out = snap.results()
+        return out if query_name is None else out[query_name]
+
+    # -- write path ----------------------------------------------------------
+
+    def apply(self, update: DeltaBatchUpdate, params=None) -> int:
+        """Fold an update batch and publish the next epoch; returns its id.
+        Serialized across threads; a rejected batch raises and leaves the
+        served epoch untouched."""
+        with self._write_lock:
+            try:
+                self.maintained.apply(update, params=params)
+            except Exception:
+                self.n_rejected_updates += 1
+                raise
+            self.n_updates += 1
+            return self.maintained.epoch
+
+    def checkpoint(self, ckpt_dir: str, keep: int = 3) -> str:
+        """Crash-safe snapshot of a pinned epoch — consistent even while a
+        concurrent ``apply`` folds the next one."""
+        with self.maintained.pinned() as epoch:
+            return self.maintained.save(ckpt_dir, keep=keep, epoch=epoch)
+
+    def stats(self) -> Dict[str, int]:
+        return {"epoch": self.maintained.epoch,
+                "step": self.maintained.step,
+                "n_reads": self.n_reads,
+                "n_updates": self.n_updates,
+                "n_rejected_updates": self.n_rejected_updates,
+                "n_pinned_epochs": self.maintained.n_pinned_epochs,
+                "n_delta_scan_steps": self.maintained.n_delta_scan_steps}

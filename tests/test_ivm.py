@@ -3,6 +3,7 @@ recomputation after any sequence of insert/delete batches, on both lowering
 backends (deterministic sequences + a hypothesis property test), plus the
 update API validation, snapshot/restore, and the streaming ML applications."""
 
+import jax
 import numpy as np
 import pytest
 
@@ -11,8 +12,11 @@ try:  # optional dev dependency: only the property test needs it
 except ModuleNotFoundError:
     st = None
 
-from repro.core import COUNT, Delta, Engine, Pow, Var, agg, query, schema, sum_of
+from repro.core import (COUNT, Delta, Engine, Lambda, Pow, Var, agg, query,
+                        schema, sum_of)
 from repro.data import DeltaBatchUpdate, apply_delta, from_numpy
+from repro.data import relations as relmod
+from repro.data.relations import Relation, ResidentRelation
 
 BACKENDS = [("xla", None), ("pallas", True)]  # (backend, interpret)
 
@@ -184,6 +188,155 @@ def test_snapshot_restore_roundtrip(tmp_path):
     assert_matches_scratch(mb2, fresh, db)
 
 
+# -- epoch versioning / transactional apply -----------------------------------
+
+def test_rejected_batch_is_clean_noop():
+    """Regression: a batch whose *second* relation (sorted order) is invalid
+    must leave results, epoch, and stored relations untouched — the old code
+    folded R1 before noticing R3's bad rows, leaving state half-updated."""
+    S = chain_schema()
+    db = from_numpy(S, chain_db())
+    eng = Engine(S, sizes=db.sizes())
+    mb = eng.compile_incremental(QUERIES, block_size=8)
+    mb.init(db)
+    before = {q.name: np.asarray(v).copy()
+              for q, v in zip(QUERIES, [mb.results()[q.name] for q in QUERIES])}
+    epoch0, step0 = mb.epoch, mb.step
+    rng = np.random.default_rng(0)
+    bad = (DeltaBatchUpdate()
+           .insert("R1", _ROW_MAKERS["R1"](rng, 4))              # valid
+           .insert("R3", {"x3": np.array([0]), "x4": np.array([99])}))  # bad
+    with pytest.raises(ValueError, match="outside"):
+        mb.apply(bad)
+    assert (mb.epoch, mb.step) == (epoch0, step0)
+    after = mb.results()
+    for q in QUERIES:
+        np.testing.assert_array_equal(before[q.name], np.asarray(after[q.name]),
+                                      err_msg=q.name)
+    # stored relations also untouched: a valid follow-up matches the oracle
+    good = DeltaBatchUpdate().insert("R1", _ROW_MAKERS["R1"](rng, 2))
+    mb.apply(good)
+    db = apply_delta(db, good)
+    assert_matches_scratch(mb, eng.compile(QUERIES, block_size=8), db)
+
+    # an out-of-range delete index is caught up front too
+    with pytest.raises(ValueError, match="outside"):
+        mb.apply(DeltaBatchUpdate().insert("R1", _ROW_MAKERS["R1"](rng, 1))
+                                   .delete("R3", np.array([999])))
+    assert mb.step == step0 + 1
+
+
+def test_pinned_epoch_frozen_across_apply():
+    """A reader pinned to epoch e sees bit-identical results before and
+    after a concurrent apply publishes e+1; unpinned reads see e+1."""
+    S = chain_schema()
+    db = from_numpy(S, chain_db())
+    eng = Engine(S, sizes=db.sizes())
+    mb = eng.compile_incremental(QUERIES, block_size=8)
+    mb.init(db)
+    fresh = eng.compile(QUERIES, block_size=8)
+    rng = np.random.default_rng(7)
+    with mb.pinned() as e:
+        before = {q.name: np.asarray(mb.results(epoch=e)[q.name]).copy()
+                  for q in QUERIES}
+        upd = (DeltaBatchUpdate().insert("R2", _ROW_MAKERS["R2"](rng, 4))
+               .delete("R1", np.array([0, 2])))
+        mb.apply(upd)
+        db = apply_delta(db, upd)
+        assert mb.epoch == e + 1
+        after = mb.results(epoch=e)
+        for q in QUERIES:
+            np.testing.assert_array_equal(
+                before[q.name], np.asarray(after[q.name]), err_msg=q.name)
+        assert_matches_scratch(mb, fresh, db)   # current epoch advanced
+    # released epoch is no longer addressable
+    with pytest.raises(KeyError, match="pinned"):
+        mb.results(epoch=e)
+
+
+@pytest.mark.parametrize("backend,interpret", BACKENDS)
+def test_steady_state_tick_no_transfers_no_retrace(backend, interpret):
+    """Acceptance: a steady-state apply tick performs zero host transfers of
+    relation columns (update payloads enter via explicit device_put, which
+    the transfer guard permits) and zero retraces, on both backends."""
+    S = chain_schema()
+    db = from_numpy(S, chain_db())
+    eng = Engine(S, sizes=db.sizes())
+    mb = eng.compile_incremental(QUERIES, block_size=8, backend=backend,
+                                 interpret=interpret)
+    mb.init(db)
+    rng = np.random.default_rng(13)
+
+    def tick():
+        # equal-count insert/delete: sizes, capacities, pad buckets all fixed
+        return (DeltaBatchUpdate().insert("R2", _ROW_MAKERS["R2"](rng, 3))
+                .delete("R2", rng.choice(29, 3, replace=False)))
+
+    for _ in range(3):                      # warm: trace fold + extract once
+        jax.block_until_ready(mb.apply(tick())["q_count"])
+    traces0 = mb.n_fold_traces + relmod.advance_trace_count()
+    with jax.transfer_guard("disallow"):    # implicit host<->device = error
+        for _ in range(4):
+            out = mb.apply(tick())
+            jax.block_until_ready(out["q_count"])
+    assert mb.n_fold_traces + relmod.advance_trace_count() == traces0
+    # still correct after the guarded ticks
+    fresh = eng.compile(QUERIES, block_size=8, backend=backend,
+                        interpret=interpret)
+    assert_matches_scratch(mb, fresh, mb.db)
+
+
+def test_resident_relation_advance_matches_oracle():
+    """Device-side delete-compact + append == the host Relation ops, order
+    included; capacity grows by pow2 doubling and reuses buffers otherwise."""
+    rng = np.random.default_rng(4)
+    cols = {"a": rng.integers(0, 9, 11).astype(np.int32),
+            "u": rng.normal(size=11).astype(np.float32)}
+    host = Relation("T", {k: np.asarray(v) for k, v in cols.items()})
+    rr = ResidentRelation.from_relation(
+        Relation("T", {k: np.asarray(v) for k, v in cols.items()}))
+    assert rr.capacity == 16 and rr.n_valid == 11
+    # delete 3, insert 2 — stays within capacity
+    del_idx = np.array([1, 4, 9], np.int32)
+    ins = {"a": np.array([7, 8], np.int32),
+           "u": np.array([0.5, -0.5], np.float32)}
+    host = host.delete_rows(del_idx)
+    host = Relation("T", {a: np.concatenate([np.asarray(host.columns[a]), ins[a]])
+                          for a in host.columns})
+    ins_dev = {a: jax.device_put(np.pad(c, (0, 2))) for a, c in ins.items()}  # pow2 pad
+    dd = jax.device_put(np.pad(del_idx, (0, 1), constant_values=rr.capacity))
+    rr = rr.advance(ins_dev, dd, 2, 3)
+    assert rr.n_valid == 10 and int(rr.n_valid_dev) == 10
+    got = rr.to_relation()
+    for a in cols:
+        np.testing.assert_array_equal(np.asarray(got.columns[a]),
+                                      np.asarray(host.columns[a]), err_msg=a)
+    # growth: insert 10 more crosses 16 -> 32
+    ins2 = {"a": np.arange(10, dtype=np.int32),
+            "u": np.ones(10, np.float32)}
+    rr2 = rr.advance({a: jax.device_put(np.pad(c, (0, 6))) for a, c in ins2.items()},
+                     jax.device_put(np.zeros((0,), np.int32)), 10, 0)
+    assert rr2.capacity == 32 and rr2.n_valid == 20
+    np.testing.assert_array_equal(
+        np.asarray(rr2.to_relation().columns["a"])[:10],
+        np.asarray(got.columns["a"]))
+
+
+def test_non_invertible_aggregate_rejected():
+    """MIN/MAX-style UDAFs (Lambda(invertible=False)) are rejected at
+    compile_incremental time — signed multiplicities cannot retract them —
+    while the batch path still compiles them."""
+    S = chain_schema()
+    db = from_numpy(S, chain_db())
+    eng = Engine(S, sizes=db.sizes())
+    qs = [query("q_softmax_max", [], [agg(Lambda(
+        ("u",), lambda u, p: u, tag="running_max", invertible=False))])]
+    with pytest.raises(ValueError, match="not invertible"):
+        eng.compile_incremental(qs)
+    eng.compile(qs)                                   # batch path: fine
+    eng.compile_incremental(QUERIES)                  # SUM-like: fine
+
+
 # -- update API validation ----------------------------------------------------
 
 def test_append_delete_validation():
@@ -205,6 +358,11 @@ def test_append_delete_validation():
     # schema-less append still checks names/lengths/dtype kinds
     with pytest.raises(ValueError, match="dtype"):
         r1.append({"x1": np.array([0.5]), "x2": np.array([0])})
+    # ... and refuses discrete columns outright: without a schema the code
+    # domain is unknowable, and out-of-range codes would be silently dropped
+    # by segment_sum (corrupted aggregates) instead of failing here
+    with pytest.raises(ValueError, match="schema"):
+        r1.append({"x1": np.array([1]), "x2": np.array([2])})
     # deletes: duplicates / out of range
     with pytest.raises(ValueError, match="duplicate"):
         r1.delete_rows(np.array([1, 1]))

@@ -1,0 +1,188 @@
+"""Concurrent epoch semantics of the view-serving path: a reader pinned to
+an epoch sees a frozen snapshot while a background updater folds and
+publishes new epochs; post-swap reads match the from-scratch oracle; and a
+checkpoint taken mid-update-stream restores to a clean (untorn) version.
+Runs on both lowering backends."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import COUNT, Delta, Engine, Var, agg, query, schema, sum_of
+from repro.data import DeltaBatchUpdate, apply_delta, from_numpy
+from repro.serve import ViewServer
+
+BACKENDS = [("xla", None), ("pallas", True)]  # (backend, interpret)
+
+
+def make_schema():
+    return schema(
+        [("x1", "categorical", 3), ("x2", "key", 4), ("x3", "key", 5),
+         ("x4", "categorical", 3), ("u", "continuous", 0)],
+        [("R1", ["x1", "x2"]), ("R2", ["x2", "x3", "u"]), ("R3", ["x3", "x4"])])
+
+
+def make_tables(seed=0, n1=17, n2=29, n3=13):
+    rng = np.random.default_rng(seed)
+    return {"R1": {"x1": rng.integers(0, 3, n1), "x2": rng.integers(0, 4, n1)},
+            "R2": {"x2": rng.integers(0, 4, n2), "x3": rng.integers(0, 5, n2),
+                   "u": rng.normal(size=n2).astype(np.float32)},
+            "R3": {"x3": rng.integers(0, 5, n3), "x4": rng.integers(0, 3, n3)}}
+
+
+QUERIES = [
+    query("q_count", [], [COUNT]),
+    query("q_g1", ["x1"], [COUNT, sum_of("u")]),
+    query("q_delta", ["x4"], [agg(Var("u"), Delta("x1", "==", 1))]),
+]
+
+
+def r2_rows(rng, k):
+    return {"x2": rng.integers(0, 4, k), "x3": rng.integers(0, 5, k),
+            "u": rng.normal(size=k).astype(np.float32)}
+
+
+def results_equal(a, b):
+    for q in QUERIES:
+        np.testing.assert_array_equal(np.asarray(a[q.name]),
+                                      np.asarray(b[q.name]), err_msg=q.name)
+
+
+@pytest.mark.parametrize("backend,interpret", BACKENDS)
+def test_background_updater_foreground_reader(backend, interpret):
+    """Reader pins an epoch, then a background thread applies several update
+    batches: every re-read through the pin is bit-identical to the first,
+    and after the updater finishes, current-epoch reads match the
+    from-scratch oracle on the final database."""
+    S = make_schema()
+    db = from_numpy(S, make_tables())
+    eng = Engine(S, sizes=db.sizes())
+    srv = ViewServer(eng.compile_incremental(
+        QUERIES, block_size=8, backend=backend, interpret=interpret))
+    srv.start(db)
+    fresh = eng.compile(QUERIES, block_size=8, backend=backend,
+                        interpret=interpret)
+    rng = np.random.default_rng(21)
+    updates = [
+        (DeltaBatchUpdate().insert("R2", r2_rows(rng, 3))
+         .delete("R2", rng.choice(29, 3, replace=False))),
+        DeltaBatchUpdate().delete("R1", np.array([0, 5])),
+        DeltaBatchUpdate().insert("R2", r2_rows(rng, 6)),
+    ]
+    oracle = db
+    errors = []
+
+    with srv.snapshot() as snap:
+        first = {q.name: np.asarray(snap.results()[q.name]).copy()
+                 for q in QUERIES}
+        e0 = snap.epoch
+
+        def updater():
+            try:
+                nonlocal oracle
+                for upd in updates:
+                    srv.apply(upd)
+                    oracle = apply_delta(oracle, upd)
+            except Exception as exc:             # surface in the main thread
+                errors.append(exc)
+
+        t = threading.Thread(target=updater)
+        t.start()
+        # interleave pinned reads with the updater's publishes; re-extract
+        # from the pinned epoch each time (bypassing EpochView's cache) so
+        # this asserts the state itself is frozen, not just a cached dict
+        for _ in range(6):
+            results_equal(first, srv.maintained.results(epoch=snap.epoch))
+        t.join()
+        assert not errors, errors
+        assert srv.epoch == e0 + len(updates)
+        results_equal(first, srv.maintained.results(epoch=snap.epoch))
+        results_equal(first, snap.results())     # handle view agrees
+    # post-swap: current epoch == oracle on the post-update database
+    exp = fresh(oracle)
+    got = srv.read()
+    for q in QUERIES:
+        np.testing.assert_allclose(np.asarray(got[q.name]),
+                                   np.asarray(exp[q.name]),
+                                   rtol=1e-3, atol=1e-3, err_msg=q.name)
+    st = srv.stats()
+    assert st["n_updates"] == len(updates)
+    assert st["n_pinned_epochs"] == 0            # all pins released
+
+
+@pytest.mark.parametrize("backend,interpret", BACKENDS)
+def test_snapshot_mid_update_roundtrip(backend, interpret, tmp_path):
+    """A checkpoint taken while an updater thread keeps publishing restores
+    into a fresh MaintainedBatch as one *clean* epoch: its results equal the
+    oracle for exactly the step it captured, and the restored batch keeps
+    applying updates correctly."""
+    S = make_schema()
+    db = from_numpy(S, make_tables(seed=3))
+    eng = Engine(S, sizes=db.sizes())
+    srv = ViewServer(eng.compile_incremental(
+        QUERIES, block_size=8, backend=backend, interpret=interpret))
+    srv.start(db)
+    fresh = eng.compile(QUERIES, block_size=8, backend=backend,
+                        interpret=interpret)
+    rng = np.random.default_rng(5)
+    db_by_step = {0: db}
+    errors = []
+
+    def updater():
+        try:
+            d = db
+            for i in range(4):
+                upd = (DeltaBatchUpdate().insert("R2", r2_rows(rng, 2))
+                       .delete("R3", np.array([i])))
+                srv.apply(upd)
+                d = apply_delta(d, upd)
+                db_by_step[i + 1] = d
+        except Exception as exc:
+            errors.append(exc)
+
+    t = threading.Thread(target=updater)
+    t.start()
+    path = srv.checkpoint(str(tmp_path))        # racing the updater
+    t.join()
+    assert not errors, errors
+
+    mb2 = eng.compile_incremental(QUERIES, block_size=8, backend=backend,
+                                  interpret=interpret)
+    step = mb2.restore(str(tmp_path))
+    assert mb2.step == step and step in db_by_step, path
+    exp = fresh(db_by_step[step])                # clean version, not a tear
+    got = mb2.results()
+    for q in QUERIES:
+        np.testing.assert_allclose(np.asarray(got[q.name]),
+                                   np.asarray(exp[q.name]),
+                                   rtol=1e-3, atol=1e-3, err_msg=q.name)
+    # restored state keeps maintaining
+    upd = DeltaBatchUpdate().insert("R2", r2_rows(rng, 3))
+    mb2.apply(upd)
+    db2 = apply_delta(db_by_step[step], upd)
+    exp = fresh(db2)
+    got = mb2.results()
+    for q in QUERIES:
+        np.testing.assert_allclose(np.asarray(got[q.name]),
+                                   np.asarray(exp[q.name]),
+                                   rtol=1e-3, atol=1e-3, err_msg=q.name)
+
+
+def test_rejected_update_leaves_served_epoch(tmp_path):
+    """ViewServer.apply on an invalid batch raises, counts the rejection,
+    and the served epoch/results are untouched."""
+    S = make_schema()
+    db = from_numpy(S, make_tables(seed=9))
+    eng = Engine(S, sizes=db.sizes())
+    srv = ViewServer(eng.compile_incremental(QUERIES, block_size=8))
+    e0 = srv.start(db)
+    before = srv.read()
+    with pytest.raises(ValueError, match="outside"):
+        srv.apply(DeltaBatchUpdate()
+                  .insert("R1", {"x1": np.array([0]), "x2": np.array([1])})
+                  .insert("R3", {"x3": np.array([0]), "x4": np.array([77])}))
+    assert srv.epoch == e0
+    results_equal(before, srv.read())
+    st = srv.stats()
+    assert st["n_rejected_updates"] == 1 and st["n_updates"] == 0
