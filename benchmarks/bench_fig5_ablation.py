@@ -15,7 +15,7 @@ import sys
 import textwrap
 
 from benchmarks.common import BENCH_SCALE, row, timeit
-from repro.core import Engine
+from repro.api import connect
 from repro.data import datasets as D
 from repro.ml.covar import covar_queries
 
@@ -24,21 +24,21 @@ def main():
     name = os.environ.get("ABLATION_DATASET", "favorita")
     ds = D.make(name, scale=BENCH_SCALE)
     qs, _ = covar_queries(ds)
-    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
+    db = connect(ds)
     lines = []
 
     # per-query: no sharing across queries
-    batches = [eng.compile([q]) for q in qs]
-    t_pq = timeit(lambda: [b(ds.db) for b in batches], warmup=1, iters=2)
+    batches = [db.views([q]) for q in qs]
+    t_pq = timeit(lambda: [b.run() for b in batches], warmup=1, iters=2)
     lines.append(row(f"f5/{name}/per_query", t_pq, f"queries={len(qs)}"))
 
-    b_sr = eng.compile(qs, multi_root=False)
-    t_sr = timeit(lambda: b_sr(ds.db))
+    b_sr = db.with_config(multi_root=False).views(qs)
+    t_sr = timeit(lambda: b_sr.run())
     lines.append(row(f"f5/{name}/single_root", t_sr,
                      f"V={b_sr.stats.n_views};speedup={t_pq / t_sr:.1f}x"))
 
-    b_mr = eng.compile(qs, multi_root=True)
-    t_mr = timeit(lambda: b_mr(ds.db))
+    b_mr = db.views(qs)
+    t_mr = timeit(lambda: b_mr.run())
     lines.append(row(f"f5/{name}/multi_root", t_mr,
                      f"V={b_mr.stats.n_views};speedup={t_sr / t_mr:.2f}x"))
 
@@ -47,22 +47,18 @@ def main():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import time, jax
-from repro.core import Engine
+import repro
 from repro.data import datasets as D
 from repro.ml.covar import covar_queries
 ds = D.make({name!r}, scale={BENCH_SCALE})
 qs, _ = covar_queries(ds)
-eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
-b = eng.compile(qs, multi_root=True)
 mesh = jax.make_mesh((4,), ("data",))
-from repro.core.distributed import sharded_runner
-fn, cols = sharded_runner(b.plan, ds.db, mesh, "data",
-                          max(ds.db.sizes(), key=lambda k: ds.db.sizes()[k]))
-jax.block_until_ready(fn(cols, {{}}))   # warmup/compile once
+db = repro.connect(ds, config=repro.ExecutionConfig(mesh=mesh))
+v = db.views(qs)
+jax.block_until_ready(v.run())   # warmup/compile once (runner is cached)
 t0 = time.perf_counter()
 for _ in range(3):
-    out = fn(cols, {{}})
-    jax.block_until_ready(out)
+    jax.block_until_ready(v.run())
 print((time.perf_counter() - t0) / 3)
 """
     env = dict(os.environ)

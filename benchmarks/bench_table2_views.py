@@ -6,7 +6,7 @@ fusion for each dataset × workload."""
 from __future__ import annotations
 
 from benchmarks.common import BENCH_SCALE, row
-from repro.core import Engine
+from repro.api import connect
 from repro.data import datasets as D
 from repro.ml import chowliu, cubes, trees
 from repro.ml.covar import covar_queries
@@ -14,10 +14,7 @@ from benchmarks.bench_table3_aggregates import CUBE_DIMS, MI_ATTRS
 
 
 def stats_for(ds, queries):
-    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
-    b = eng.compile(queries)
-    s = b.stats
-    return s
+    return connect(ds).views(queries).stats
 
 
 def fmt(s) -> str:

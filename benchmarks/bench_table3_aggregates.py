@@ -10,7 +10,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import BENCH_SCALE, row, timeit
-from repro.core import COUNT, Engine, query
+from repro.api import connect
+from repro.core import COUNT, query
 from repro.core.plan import materialize_join
 from repro.data import datasets as D
 from repro.ml import chowliu, cubes, trees
@@ -52,7 +53,7 @@ def _naive_group_aggregate(J, group_by, vals_fn, dims):
 
 def bench(dataset_name: str):
     ds = D.make(dataset_name, scale=BENCH_SCALE)
-    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
+    db = connect(ds)
     lines = []
 
     def naive_join():
@@ -63,15 +64,15 @@ def bench(dataset_name: str):
     n_join = len(next(iter(J.values())))
 
     # -- count ---------------------------------------------------------------
-    b = eng.compile([query("cnt", [], [COUNT])])
-    t = timeit(lambda: b(ds.db))
+    b = db.views([query("cnt", [], [COUNT])])
+    t = timeit(lambda: b.run())
     lines.append(row(f"t3/{dataset_name}/count/lmfao", t, f"rows={n_join}"))
     lines.append(row(f"t3/{dataset_name}/count/naive", t_join, "join_materialize"))
 
     # -- covar matrix ----------------------------------------------------------
     qs, layout = covar_queries(ds)
-    b = eng.compile(qs)
-    t = timeit(lambda: b(ds.db))
+    b = db.views(qs)
+    t = timeit(lambda: b.run())
     n_aggs = b.stats.n_app_aggregates
 
     def naive_cm():
@@ -117,8 +118,8 @@ def bench(dataset_name: str):
     # -- mutual information -------------------------------------------------------
     attrs = MI_ATTRS[dataset_name]
     qs = chowliu.mi_queries(attrs)
-    b = eng.compile(qs)
-    t = timeit(lambda: b(ds.db))
+    b = db.views(qs)
+    t = timeit(lambda: b.run())
 
     def naive_mi():
         Jn = naive_join()
@@ -137,12 +138,12 @@ def bench(dataset_name: str):
 
     # -- data cube -----------------------------------------------------------------
     dims, meas = CUBE_DIMS[dataset_name]
-    finest = eng.compile(cubes.cube_queries(dims, meas)[-1:])  # finest cell only
-    finest(ds.db)  # warm
+    finest = db.views(cubes.cube_queries(dims, meas)[-1:])  # finest cell only
+    finest.run()  # warm
 
     def cube_lmfao():
         import itertools
-        fin = np.asarray(finest(ds.db)[cubes.cube_name(dims)], np.float64)
+        fin = np.asarray(finest.run()[cubes.cube_name(dims)], np.float64)
         out = {}
         for r in range(len(dims) + 1):
             for subset in itertools.combinations(dims, r):

@@ -21,16 +21,15 @@ def bench_ridge(name: str):
     ds = D.make(name, scale=BENCH_SCALE)
     # compile once (the paper reports warm runs; its compile overhead is
     # reported separately), then time the full covar+assemble+BGD pipeline
-    from repro.core import Engine
+    from repro.api import connect
     from repro.ml.covar import assemble_covar, covar_queries
     import numpy as _np
     qs, layout = covar_queries(ds)
-    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
-    batch = eng.compile(qs)
-    batch(ds.db)  # warm/compile
+    views = connect(ds).views(qs)
+    views.run()  # warm/compile
 
     def lmfao_path():
-        out = {k: _np.asarray(v) for k, v in batch(ds.db).items()}
+        out = {k: _np.asarray(v) for k, v in views.run().items()}
         C, N = assemble_covar(out, layout)
         res = ridge.bgd(C, N, layout, lam=1e-3, max_iters=500)
         return res.theta, layout

@@ -17,7 +17,7 @@ import time
 import numpy as np
 
 from benchmarks.common import timeit
-from repro.core import Engine
+from repro.api import connect
 from repro.data import datasets as D
 from repro.ml.covar import assemble_covar, covar_queries
 from repro.ml.covar_fused import compute_covar_fused, supports_fused
@@ -31,32 +31,32 @@ def main(argv=None):
 
     ds = D.make(args.dataset, scale=args.scale)
     qs, layout = covar_queries(ds)
-    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
+    db = connect(ds)
     results = {}
     n_fact = ds.db.relation(ds.fact).n_rows
     print(f"[perf] dataset={args.dataset} scale={args.scale} "
           f"fact_rows={n_fact:,} p={layout.p}")
 
     # -- baseline: paper-faithful engine path (multi-root, block 4096) -------
-    b0 = eng.compile(qs, multi_root=True, block_size=4096)
-    out0 = b0(ds.db)
+    b0 = db.views(qs)
+    out0 = b0.run()
     C0, N0 = assemble_covar({k: np.asarray(v) for k, v in out0.items()}, layout)
-    t0 = timeit(lambda: b0(ds.db))
+    t0 = timeit(lambda: b0.run())
     results["baseline_block4096"] = t0
     print(f"[perf] baseline (engine, multi-root, block=4096): {t0:.3f}s")
 
     # -- iteration 1: block size ---------------------------------------------
     for bs in (1024, 16384, 65536):
-        bb = eng.compile(qs, multi_root=True, block_size=bs)
-        bb(ds.db)
-        t = timeit(lambda: bb(ds.db))
+        bb = db.with_config(block_size=bs).views(qs)
+        bb.run()
+        t = timeit(lambda: bb.run())
         results[f"block{bs}"] = t
         print(f"[perf] block_size={bs}: {t:.3f}s ({t0 / t:.2f}x vs baseline)")
 
     # -- iteration 2: single-root ablation (negative control) ----------------
-    bsr = eng.compile(qs, multi_root=False, block_size=4096)
-    bsr(ds.db)
-    t = timeit(lambda: bsr(ds.db))
+    bsr = db.with_config(multi_root=False).views(qs)
+    bsr.run()
+    t = timeit(lambda: bsr.run())
     results["single_root"] = t
     print(f"[perf] single-root: {t:.3f}s ({t0 / t:.2f}x vs baseline)")
 

@@ -3,15 +3,18 @@
     PYTHONPATH=src python examples/chow_liu_cubes.py
 """
 
+import os
 import time
 
 from repro.data import datasets as D
 from repro.ml.chowliu import chow_liu
 from repro.ml.cubes import cube_name, cube_rollup, cube_via_engine
 
+SCALE = float(os.environ.get("EXAMPLES_SCALE", "0.1"))
+
 
 def main():
-    ds = D.make("favorita", scale=0.1)
+    ds = D.make("favorita", scale=SCALE)
 
     t0 = time.time()
     res = chow_liu(ds, attrs=["city", "state", "stype", "cluster", "family",

@@ -7,6 +7,7 @@ parameters of dynamic UDAFs (the paper recompiles C++ per node; traced JAX
 params make that free).
 """
 
+import os
 import time
 
 import numpy as np
@@ -15,9 +16,11 @@ from repro.core.plan import materialize_join
 from repro.data import datasets as D
 from repro.ml.trees import DecisionTree
 
+SCALE = float(os.environ.get("EXAMPLES_SCALE", "0.2"))
+
 
 def main():
-    ds = D.make("favorita", scale=0.2)
+    ds = D.make("favorita", scale=SCALE)
     t0 = time.time()
     dt = DecisionTree(ds, task="regression", max_depth=4, min_instances=100,
                       max_nodes=31).fit()
@@ -43,7 +46,7 @@ def main():
                   f"bucket {node.threshold}")
 
     # classification over TPC-DS (paper Table 5)
-    ds2 = D.make("tpcds", scale=0.1)
+    ds2 = D.make("tpcds", scale=min(SCALE, 0.1))
     ct = DecisionTree(ds2, task="classification", label="c_preferred",
                       max_depth=3, min_instances=100, max_nodes=15).fit()
     J2 = materialize_join(ds2.schema, ds2.tables,

@@ -3,19 +3,30 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Builds a small Favorita-like database (6 relations, star schema — paper
-Fig. 3), declares a batch of aggregate queries in the paper's Q(F; α) form,
-compiles it through the engine's layers (join tree -> roots -> directional
-views -> merging -> view groups -> multi-output jit plans), and runs it.
+Fig. 3), opens a session with ``repro.connect``, declares a batch of
+aggregate queries in the paper's Q(F; α) form, registers them as named
+views (one compile through the engine's layers: join tree -> roots ->
+directional views -> merging -> view groups -> multi-output jit plans),
+and runs them.  The session's :class:`repro.ExecutionConfig` is the ONE
+place execution policy lives — swap ``backend="pallas"``, set a mesh, or
+pass ``maintain=True`` to the same ``views()`` call for incremental
+maintenance, without changing any of the code below.
 """
+
+import os
 
 import numpy as np
 
-from repro.core import COUNT, Delta, Engine, Var, agg, query, sum_of, sum_prod
+import repro
+from repro.core import COUNT, Delta, Var, agg, query, sum_of, sum_prod
+from repro.data import DeltaBatchUpdate
 from repro.data import datasets as D
+
+SCALE = float(os.environ.get("EXAMPLES_SCALE", "0.1"))
 
 
 def main():
-    ds = D.make("favorita", scale=0.1)
+    ds = D.make("favorita", scale=SCALE)
     print(f"database: {ds.db.total_tuples():,} tuples across "
           f"{len(ds.tables)} relations")
 
@@ -34,12 +45,14 @@ def main():
                               agg(Var("units"), Delta("promo", "==", 1))]),
     ]
 
-    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
-    batch = eng.compile(queries)
-    print("layer stats:", batch.stats.summary())
-    print("roots:", batch.stats.roots)
+    # one session: schema + join tree + resident relations + frozen config
+    db = repro.connect(ds, config=repro.ExecutionConfig(backend="xla",
+                                                        block_size=4096))
+    views = db.views(queries)                 # compile once, names = queries
+    print("registered views:", ", ".join(views.names))
+    print(views.explain().summary())
 
-    out = batch(ds.db)
+    out = views.run()                         # one fused device dispatch
     print(f"total_units = {float(out['total_units'][0]):,.0f}")
     bf = np.asarray(out["by_family"])
     print(f"by_family: {bf.shape[0]} families; "
@@ -47,6 +60,17 @@ def main():
     print(f"covar(units, txns) = {float(out['cm_units_txns'][0]):,.0f}")
     print(f"promo rows = {float(out['rt_node'][..., 0]):,.0f}, "
           f"promo units = {float(out['rt_node'][..., 1]):,.0f}")
+
+    # same queries, same session — but live under updates: maintain=True
+    live = db.views(queries, maintain=True)
+    live.run()                                # full scan -> epoch 0
+    fact = ds.tables[ds.fact]
+    pick = np.random.default_rng(0).integers(0, len(fact["units"]), 64)
+    live.apply(DeltaBatchUpdate().insert(
+        ds.fact, {a: np.asarray(c)[pick] for a, c in fact.items()}))
+    print(f"after one 64-row insert batch: epoch={live.maintained.epoch}, "
+          f"total_units = {float(live.results()['total_units'][0]):,.0f}")
+    print(live.explain().summary())
 
 
 if __name__ == "__main__":

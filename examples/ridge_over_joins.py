@@ -7,6 +7,7 @@ Armijo/Barzilai-Borwein over the (tiny) sufficient statistics, cross-checks
 against the closed-form solution, and evaluates RMSE on held-out rows.
 """
 
+import os
 import time
 
 import numpy as np
@@ -16,9 +17,11 @@ from repro.data import datasets as D
 from repro.ml import ridge
 from repro.ml.covar import compute_covar
 
+SCALE = float(os.environ.get("EXAMPLES_SCALE", "0.2"))
+
 
 def main():
-    ds = D.make("retailer", scale=0.2)
+    ds = D.make("retailer", scale=SCALE)
     t0 = time.time()
     C, N, layout, batch = compute_covar(ds)
     t_agg = time.time() - t0

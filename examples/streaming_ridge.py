@@ -8,6 +8,7 @@ maintained covar views (`core/ivm.py`) and re-solves the closed form —
 compare the per-tick cost against recomputing the whole aggregate batch.
 """
 
+import os
 import time
 
 import numpy as np
@@ -15,9 +16,11 @@ import numpy as np
 from repro.data import datasets as D
 from repro.ml.online import OnlineRidge
 
+SCALE = float(os.environ.get("EXAMPLES_SCALE", "0.2"))
+
 
 def main():
-    ds = D.make("favorita", scale=0.2)
+    ds = D.make("favorita", scale=SCALE)
     olr = OnlineRidge(ds)
 
     t0 = time.time()

@@ -1,0 +1,26 @@
+"""repro — A Layered Aggregate Engine for Analytics Workloads, in JAX.
+
+Public session API (DESIGN.md §9):
+
+    import repro
+    db = repro.connect(dataset, config=repro.ExecutionConfig(...))
+    out = db.views(queries).run()
+
+Submodules (``repro.core``, ``repro.ml``, ``repro.data``, ``repro.serve``,
+…) import independently; the facade loads lazily so ``import repro`` stays
+cheap and cycle-free.
+"""
+
+_API = ("connect", "Database", "ExecutionConfig", "ViewHandle", "ViewReport")
+
+__all__ = list(_API)
+
+
+def __getattr__(name):
+    if name in _API:
+        from repro import api
+        return getattr(api, name)
+    if name == "EngineDeprecationWarning":
+        from repro.core.engine import EngineDeprecationWarning
+        return EngineDeprecationWarning
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

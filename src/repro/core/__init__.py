@@ -8,7 +8,8 @@ parallelization (shard_map) -> code generation (jit/XLA).
 from repro.core.aggregates import (Aggregate, Constant, Delta, Lambda, Param,
                                    Pow, ProductAgg, Query, Term, Var, agg,
                                    COUNT, query, sum_of, sum_prod, sum_sq)
-from repro.core.engine import BatchStats, CompiledBatch, Engine
+from repro.core.engine import (BatchStats, CompiledBatch, Engine,
+                               EngineDeprecationWarning)
 from repro.core.jointree import JoinTree, materialize_bag
 from repro.core.schema import (Attribute, DatabaseSchema, RelationSchema,
                                CATEGORICAL, CONTINUOUS, KEY, schema)
@@ -22,7 +23,8 @@ from repro.core.schema import (Attribute, DatabaseSchema, RelationSchema,
 __all__ = [
     "Aggregate", "Constant", "Delta", "Lambda", "Param", "Pow", "ProductAgg",
     "Query", "Term", "Var", "agg", "COUNT", "query", "sum_of", "sum_prod",
-    "sum_sq", "BatchStats", "CompiledBatch", "Engine", "JoinTree",
+    "sum_sq", "BatchStats", "CompiledBatch", "Engine",
+    "EngineDeprecationWarning", "JoinTree",
     "materialize_bag", "Attribute", "DatabaseSchema", "RelationSchema",
     "CATEGORICAL", "CONTINUOUS", "KEY", "schema",
 ]

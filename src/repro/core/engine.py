@@ -1,9 +1,15 @@
-"""LMFAO public API: compile a batch of aggregate queries into an executable.
+"""Engine internals: compile a batch of aggregate queries into an executable.
+
+The *public* entry point is the session facade (``repro.connect`` →
+``Database.views``, DESIGN.md §9); this module is what it drives:
 
     eng = Engine(schema, sizes=db.sizes())
-    batch = eng.compile(queries)              # layers 1-6 + jit (codegen)
+    batch = eng._compile(queries)             # layers 1-6 + jit (codegen)
     results = batch(db)                       # {query name: dense array}
     results = batch.run_sharded(db, mesh)     # domain-parallel over chips
+
+``Engine.compile`` / ``Engine.compile_incremental`` remain as deprecated
+shims (one release) that emit :class:`EngineDeprecationWarning`.
 
 Compilation lowers through three separable stages (DESIGN.md §3-§5): the
 group-program IR (``ir.py``), the shared-scan scheduler (``schedule.py``),
@@ -14,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -26,6 +33,14 @@ from repro.core.jointree import JoinTree
 from repro.core.plan import ExecutablePlan, PlanConfig
 from repro.core.pushdown import PushdownResult, push_down
 from repro.core.schema import DatabaseSchema
+
+
+class EngineDeprecationWarning(DeprecationWarning):
+    """Raised (as a warning) by the legacy compile entry points; the
+    session facade (``repro.connect`` → ``Database.views``, DESIGN.md §9)
+    replaces them.  A distinct category so CI can fail hard on deprecated
+    API leaking out of this package without tripping on third-party
+    DeprecationWarnings."""
 
 
 @dataclasses.dataclass
@@ -215,6 +230,22 @@ class Engine:
                 block_size: int = 4096, backend: str = "xla",
                 interpret: Optional[bool] = None, fuse_scans: bool = True,
                 root_override: Optional[Dict[str, str]] = None) -> CompiledBatch:
+        """Deprecated shim over :meth:`_compile` — use the session facade:
+        ``repro.connect(..., config=ExecutionConfig(...)).views(queries)``."""
+        warnings.warn(
+            "Engine.compile is deprecated; open a session with "
+            "repro.connect(dataset_or_schema, config=ExecutionConfig(...)) "
+            "and register the batch with Database.views(queries) "
+            "(DESIGN.md §9)", EngineDeprecationWarning, stacklevel=2)
+        return self._compile(queries, multi_root=multi_root,
+                             block_size=block_size, backend=backend,
+                             interpret=interpret, fuse_scans=fuse_scans,
+                             root_override=root_override)
+
+    def _compile(self, queries: Sequence[Query], *, multi_root: bool = True,
+                 block_size: int = 4096, backend: str = "xla",
+                 interpret: Optional[bool] = None, fuse_scans: bool = True,
+                 root_override: Optional[Dict[str, str]] = None) -> CompiledBatch:
         """Compile a query batch.  ``backend`` selects the lowering path
         (``"xla"``: blocked lax.scan; ``"pallas"``: MXU kernels, with
         ``interpret`` controlling CPU interpret mode — None auto-detects);
@@ -238,6 +269,25 @@ class Engine:
                             fuse_scans: bool = True,
                             root_override: Optional[Dict[str, str]] = None,
                             warm_rels: Sequence[str] = ()):
+        """Deprecated shim over :meth:`_compile_incremental` — use
+        ``repro.connect(...).views(queries, maintain=True)``."""
+        warnings.warn(
+            "Engine.compile_incremental is deprecated; open a session with "
+            "repro.connect(...) and register maintained views with "
+            "Database.views(queries, maintain=True) (DESIGN.md §9)",
+            EngineDeprecationWarning, stacklevel=2)
+        return self._compile_incremental(
+            queries, multi_root=multi_root, block_size=block_size,
+            backend=backend, interpret=interpret, fuse_scans=fuse_scans,
+            root_override=root_override, warm_rels=warm_rels)
+
+    def _compile_incremental(self, queries: Sequence[Query], *,
+                             multi_root: bool = True, block_size: int = 4096,
+                             backend: str = "xla",
+                             interpret: Optional[bool] = None,
+                             fuse_scans: bool = True,
+                             root_override: Optional[Dict[str, str]] = None,
+                             warm_rels: Sequence[str] = ()):
         """Compile a query batch for incremental view maintenance: returns a
         :class:`~repro.core.ivm.MaintainedBatch` whose ``init(db)``
         materializes every view as persistent state and whose ``apply``
@@ -267,10 +317,10 @@ class Engine:
                                 "results on deletes; use Engine.compile for "
                                 "batch recomputation instead")
 
-        batch = self.compile(queries, multi_root=multi_root,
-                             block_size=block_size, backend=backend,
-                             interpret=interpret, fuse_scans=fuse_scans,
-                             root_override=root_override)
+        batch = self._compile(queries, multi_root=multi_root,
+                              block_size=block_size, backend=backend,
+                              interpret=interpret, fuse_scans=fuse_scans,
+                              root_override=root_override)
         mb = MaintainedBatch(batch)
         for rel in warm_rels:
             mb.delta_program(rel)

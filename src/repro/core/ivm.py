@@ -43,6 +43,7 @@ round-trip of relation columns and no retrace.
 
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import threading
@@ -204,6 +205,13 @@ def build_delta_program(schema: DatabaseSchema, views: Mapping[int, ViewDef],
 
 # -------------------------------------------------------------- maintenance
 
+class EpochEvictedError(KeyError):
+    """A read hit an epoch whose pin was evicted under the server's
+    ``max_pinned_epochs`` budget.  Long-lived pins retain whole epochs of
+    device memory, so the budget force-releases the least-recently-used pin
+    once exceeded; a reader holding an evicted handle must re-snapshot."""
+
+
 @dataclasses.dataclass(frozen=True)
 class EpochState:
     """One immutable published version of the maintained state: every view
@@ -263,8 +271,23 @@ class MaintainedBatch:
         self._runners: Dict[Tuple, object] = {}
         self._init_runners: Dict[Tuple, object] = {}
         self._extract = jax.jit(self.plan.extract_outputs)
-        self._pins: Dict[int, list] = {}          # epoch -> [EpochState, refs]
+        # epoch -> [EpochState, refs]; ordered LRU-first (reads/pins
+        # move_to_end) so the pin budget can evict the coldest epoch
+        self._pins: "collections.OrderedDict[int, list]" = \
+            collections.OrderedDict()
         self._pin_lock = threading.Lock()
+        #: pin budget: beyond this many distinct pinned epochs the LRU pin
+        #: is force-released (None = unbounded; serve/views.py sets it)
+        self.max_pinned_epochs: Optional[int] = None
+        #: pins force-released under the budget (reads of those epochs
+        #: raise :class:`EpochEvictedError`)
+        self.n_evicted_pins = 0
+        # evicted epoch ids, newest last, for clear read errors; bounded by
+        # trimming the oldest records into _evicted_floor, so the
+        # unpin-after-evict no-op contract survives arbitrarily long streams
+        self._evicted: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+        self._evicted_floor = -1      # every evicted epoch <= this is trimmed
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -273,6 +296,11 @@ class MaintainedBatch:
         if es is None:
             raise ValueError("call init(db) first")
         return es
+
+    @property
+    def initialized(self) -> bool:
+        """Whether an epoch has been published (init/restore has run)."""
+        return self._current is not None
 
     @property
     def epoch(self) -> int:
@@ -328,7 +356,14 @@ class MaintainedBatch:
         with self._pin_lock:
             ent = self._pins.get(epoch)
             if ent is not None:
+                self._pins.move_to_end(epoch)     # LRU touch
                 return ent[0]
+            if epoch in self._evicted or epoch <= self._evicted_floor:
+                raise EpochEvictedError(
+                    f"epoch {epoch} was evicted under the pin budget "
+                    f"(max_pinned_epochs={self.max_pinned_epochs}); its "
+                    "device state has been released — take a fresh "
+                    "snapshot/pin to read current state")
         raise KeyError(
             f"epoch {epoch} is neither current ({es.epoch}) nor pinned — "
             "pin() an epoch before reading it across updates")
@@ -344,17 +379,30 @@ class MaintainedBatch:
     def pin(self) -> int:
         """Retain the current epoch for consistent reads across updates;
         returns its id.  Balance every pin with :meth:`unpin` — the epoch's
-        device arrays stay alive while pinned."""
+        device arrays stay alive while pinned.  With a ``max_pinned_epochs``
+        budget set, pinning past it force-releases the least-recently-used
+        pinned epoch (its readers get :class:`EpochEvictedError`)."""
         es = self._require()
         with self._pin_lock:
             ent = self._pins.setdefault(es.epoch, [es, 0])
             ent[1] += 1
+            self._pins.move_to_end(es.epoch)
+            budget = self.max_pinned_epochs
+            while budget is not None and len(self._pins) > budget:
+                victim, _ = self._pins.popitem(last=False)   # LRU
+                self._evicted[victim] = None
+                self.n_evicted_pins += 1
+                while len(self._evicted) > 1024:             # bound bookkeeping
+                    old, _ = self._evicted.popitem(last=False)
+                    self._evicted_floor = max(self._evicted_floor, old)
         return es.epoch
 
     def unpin(self, epoch: int) -> None:
         with self._pin_lock:
             ent = self._pins.get(epoch)
             if ent is None:
+                if epoch in self._evicted or epoch <= self._evicted_floor:
+                    return          # pin was force-released by the budget
                 raise KeyError(f"epoch {epoch} is not pinned")
             ent[1] -= 1
             if ent[1] <= 0:

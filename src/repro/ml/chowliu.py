@@ -14,7 +14,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import COUNT, Engine, query
+from repro.api import Database, ExecutionConfig, connect
+from repro.core import COUNT, query
 from repro.data.datasets import Dataset
 
 
@@ -47,12 +48,19 @@ def mutual_information(joint: np.ndarray, ma: np.ndarray, mb: np.ndarray,
 
 
 def chow_liu(ds: Dataset, attrs: Optional[Sequence[str]] = None,
-             multi_root: bool = True, block_size: int = 4096) -> ChowLiuResult:
+             multi_root: bool = True, block_size: int = 4096,
+             backend: str = "xla", interpret: Optional[bool] = None,
+             config: Optional[ExecutionConfig] = None,
+             database: Optional[Database] = None) -> ChowLiuResult:
+    """Learn the Chow-Liu tree.  ``backend``/``block_size`` (or a full
+    ``config`` / an open ``database`` session) select the lowering path —
+    this workload threads the execution config like every other."""
     attrs = list(attrs if attrs is not None else ds.features_cat)
     qs = mi_queries(attrs)
-    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
-    batch = eng.compile(qs, multi_root=multi_root, block_size=block_size)
-    out = {k: np.asarray(v, np.float64) for k, v in batch(ds.db).items()}
+    db = database or connect(ds, config=config or ExecutionConfig(
+        multi_root=multi_root, block_size=block_size, backend=backend,
+        interpret=interpret))
+    out = {k: np.asarray(v, np.float64) for k, v in db.views(qs).run().items()}
 
     n = len(attrs)
     total = float(out["mi_total"][0])

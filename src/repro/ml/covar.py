@@ -15,7 +15,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import COUNT, Engine, Var, agg, query, sum_of, sum_prod
+from repro.api import Database, ExecutionConfig, connect
+from repro.core import COUNT, Var, agg, query, sum_of, sum_prod
 from repro.core.aggregates import Query
 from repro.data.datasets import Dataset
 
@@ -117,16 +118,20 @@ def assemble_covar(outputs: Dict[str, np.ndarray], layout: CovarLayout) -> Tuple
     return C, N
 
 
-def compute_covar(ds: Dataset, engine: Optional[Engine] = None,
+def compute_covar(ds: Dataset, database: Optional[Database] = None,
                   cont: Optional[Sequence[str]] = None,
                   cat: Optional[Sequence[str]] = None,
                   multi_root: bool = True, block_size: int = 4096,
-                  backend: str = "xla", interpret: Optional[bool] = None):
-    """End-to-end: build batch, run engine, assemble dense covar."""
+                  backend: str = "xla", interpret: Optional[bool] = None,
+                  config: Optional[ExecutionConfig] = None):
+    """End-to-end: register the covar batch as views on a session, run it,
+    assemble the dense covar.  Pass ``database`` to reuse an open session
+    (its config wins), or ``config`` / the legacy kwargs to open one."""
     qs, layout = covar_queries(ds, cont, cat)
-    eng = engine or Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
-    batch = eng.compile(qs, multi_root=multi_root, block_size=block_size,
-                        backend=backend, interpret=interpret)
-    outputs = batch(ds.db)
+    db = database or connect(ds, config=config or ExecutionConfig(
+        multi_root=multi_root, block_size=block_size, backend=backend,
+        interpret=interpret))
+    views = db.views(qs)
+    outputs = views.run()
     C, N = assemble_covar({k: np.asarray(v) for k, v in outputs.items()}, layout)
-    return C, N, layout, batch
+    return C, N, layout, views.compiled

@@ -10,6 +10,10 @@ Three evaluation paths:
     insert/delete batches via the IVM subsystem (``core/ivm.py``), exact for
     the SUM measures the cube is built from.
 Tests assert the paths agree.
+
+All three thread the session's :class:`~repro.api.ExecutionConfig` —
+``backend``/``block_size`` select the lowering path for cubes exactly as for
+every other workload (they used to be silently dropped here).
 """
 
 from __future__ import annotations
@@ -19,7 +23,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import Engine, query, sum_of
+from repro.api import Database, ExecutionConfig, connect
+from repro.core import query, sum_of
 from repro.data.datasets import Dataset
 from repro.data.relations import DeltaBatchUpdate
 
@@ -37,13 +42,26 @@ def cube_queries(dims: Sequence[str], measures: Sequence[str]):
     return qs
 
 
+def _session(ds: Dataset, database: Optional[Database],
+             config: Optional[ExecutionConfig], multi_root: bool,
+             block_size: int, backend: str,
+             interpret: Optional[bool]) -> Database:
+    if database is not None:
+        return database
+    return connect(ds, config=config or ExecutionConfig(
+        multi_root=multi_root, block_size=block_size, backend=backend,
+        interpret=interpret))
+
+
 def cube_via_engine(ds: Dataset, dims: Sequence[str], measures: Sequence[str],
                     multi_root: bool = True, block_size: int = 4096,
-                    engine: Optional[Engine] = None) -> Dict[str, np.ndarray]:
+                    backend: str = "xla", interpret: Optional[bool] = None,
+                    config: Optional[ExecutionConfig] = None,
+                    database: Optional[Database] = None) -> Dict[str, np.ndarray]:
     qs = cube_queries(dims, measures)
-    eng = engine or Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
-    batch = eng.compile(qs, multi_root=multi_root, block_size=block_size)
-    return {k: np.asarray(v, np.float64) for k, v in batch(ds.db).items()}
+    db = _session(ds, database, config, multi_root, block_size, backend,
+                  interpret)
+    return {k: np.asarray(v, np.float64) for k, v in db.views(qs).run().items()}
 
 
 class StreamingCube:
@@ -58,27 +76,36 @@ class StreamingCube:
 
     def __init__(self, ds: Dataset, dims: Sequence[str], measures: Sequence[str],
                  backend: str = "xla", interpret: Optional[bool] = None,
-                 block_size: int = 4096):
+                 block_size: int = 4096,
+                 config: Optional[ExecutionConfig] = None,
+                 database: Optional[Database] = None):
         qs = cube_queries(dims, measures)
-        eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
-        self.maintained = eng.compile_incremental(
-            qs, backend=backend, interpret=interpret, block_size=block_size,
-            root_override={q.name: ds.fact for q in qs}, warm_rels=(ds.fact,))
-        self.maintained.init(ds.db)
+        db = _session(ds, database, config, True, block_size, backend,
+                      interpret)
+        self.view = db.views(qs, maintain=True,
+                             roots={q.name: ds.fact for q in qs},
+                             warm_rels=(ds.fact,))
+        self.maintained = self.view.maintained
+        self.view.run()                        # full scan -> epoch 0
 
     def update(self, update: DeltaBatchUpdate) -> Dict[str, np.ndarray]:
-        self.maintained.apply(update)
+        self.view.apply(update)
         return self.cells()
 
     def cells(self) -> Dict[str, np.ndarray]:
         return {k: np.asarray(v, np.float64)
-                for k, v in self.maintained.results().items()}
+                for k, v in self.view.results().items()}
 
 
 def cube_rollup(ds: Dataset, dims: Sequence[str], measures: Sequence[str],
-                block_size: int = 4096) -> Dict[str, np.ndarray]:
+                block_size: int = 4096, backend: str = "xla",
+                interpret: Optional[bool] = None,
+                config: Optional[ExecutionConfig] = None,
+                database: Optional[Database] = None) -> Dict[str, np.ndarray]:
     finest = cube_via_engine(ds, dims, measures, block_size=block_size,
-                             multi_root=True)[cube_name(dims)]
+                             multi_root=True, backend=backend,
+                             interpret=interpret, config=config,
+                             database=database)[cube_name(dims)]
     out: Dict[str, np.ndarray] = {}
     for r in range(len(dims) + 1):
         for subset in itertools.combinations(dims, r):

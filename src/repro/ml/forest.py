@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.api import Database, ExecutionConfig
 from repro.data.datasets import Dataset
 from repro.ml.trees import (DecisionTree, TreeNode, build_tree_batch,
                             build_tree_features, child_masks, predict_nodes,
@@ -51,7 +52,9 @@ class RandomForest:
                  max_nodes: int = 31, feature_fraction: float = 0.6,
                  seed: int = 0, block_size: int = 4096,
                  multi_root: bool = True, backend: str = "xla",
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 config: Optional[ExecutionConfig] = None,
+                 database: Optional[Database] = None):
         if n_trees < 1:
             raise ValueError("n_trees must be >= 1")
         self.ds = ds
@@ -67,10 +70,11 @@ class RandomForest:
         self.features = build_tree_features(
             ds, self.label if task == "classification" else None, split_attrs)
         n_classes = ds.schema.domain(self.label) if task == "classification" else 0
-        self.batch, _ = build_tree_batch(
+        self.view, _ = build_tree_batch(
             ds, self.features, task, self.label, n_classes, node_batch=True,
             block_size=block_size, multi_root=multi_root, backend=backend,
-            interpret=interpret)
+            interpret=interpret, config=config, database=database)
+        self.batch = self.view.compiled
 
         rng = np.random.default_rng(seed)
         k = max(1, int(round(feature_fraction * len(self.features))))
@@ -83,7 +87,7 @@ class RandomForest:
                 split_attrs=[f.attr for f in self.features],
                 max_depth=max_depth, min_instances=min_instances,
                 max_nodes=max_nodes, node_batch=True,
-                allowed_attrs=subset, batch=self.batch))
+                allowed_attrs=subset, batch=self.view))
 
     def fit(self) -> "RandomForest":
         """Grow every tree level-synchronously: one fused dispatch evaluates
@@ -98,7 +102,7 @@ class RandomForest:
                 spans.append((t, len(ms)))
                 mask_list += ms
             params = stack_mask_params(self.features, mask_list)
-            outputs = self.batch.run_batched(self.ds.db, params)
+            outputs = self.view.run_batched(params)
             stats = {f.attr: np.asarray(outputs[f"split_{f.attr}"], np.float64)
                      for f in self.features}
             o = 0
@@ -138,7 +142,9 @@ class GradientBoostedTrees:
                  max_depth: int = 3, min_instances: int = 1000,
                  max_nodes: int = 15, block_size: int = 4096,
                  multi_root: bool = True, backend: str = "xla",
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 config: Optional[ExecutionConfig] = None,
+                 database: Optional[Database] = None):
         self.ds = ds
         self.label = ds.label
         self.n_rounds = n_rounds
@@ -148,10 +154,11 @@ class GradientBoostedTrees:
         self.max_nodes = max_nodes
 
         self.features = build_tree_features(ds, None, split_attrs)
-        self.batch, _ = build_tree_batch(
+        self.view, _ = build_tree_batch(
             ds, self.features, "regression", self.label, 0, node_batch=True,
             block_size=block_size, multi_root=multi_root, backend=backend,
-            interpret=interpret)
+            interpret=interpret, config=config, database=database)
+        self.batch = self.view.compiled
 
         self.base: float = 0.0
         self.trees: List[List[TreeNode]] = []
@@ -181,7 +188,7 @@ class GradientBoostedTrees:
             for lmask, _ in self._leaves:
                 mask_list.append({a: m[a] * lmask[a] for a in m})
         params = stack_mask_params(self.features, mask_list)
-        outputs = self.batch.run_batched(self.ds.db, params)
+        outputs = self.view.run_batched(params)
         stats = {f.attr: np.asarray(outputs[f"split_{f.attr}"], np.float64)
                  for f in self.features}
         if not self._base_set:

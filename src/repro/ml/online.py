@@ -20,7 +20,7 @@ from typing import Mapping, Optional, Sequence
 
 import numpy as np
 
-from repro.core import Engine
+from repro.api import Database, ExecutionConfig, connect
 from repro.data.relations import DeltaBatchUpdate
 from repro.ml import ridge
 from repro.ml.covar import assemble_covar, covar_queries
@@ -39,27 +39,31 @@ class OnlineRidge:
                  cont: Optional[Sequence[str]] = None,
                  cat: Optional[Sequence[str]] = None,
                  backend: str = "xla", interpret: Optional[bool] = None,
-                 block_size: int = 4096, root_at_fact: bool = True):
+                 block_size: int = 4096, root_at_fact: bool = True,
+                 config: Optional[ExecutionConfig] = None,
+                 database: Optional[Database] = None):
         self.ds = ds
         self.lam = lam
         qs, self.layout = covar_queries(ds, cont, cat)
-        eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
+        db = database or connect(ds, config=config or ExecutionConfig(
+            backend=backend, interpret=interpret, block_size=block_size))
         roots = {q.name: ds.fact for q in qs} if root_at_fact else None
-        self.maintained = eng.compile_incremental(
-            qs, backend=backend, interpret=interpret, block_size=block_size,
-            root_override=roots, warm_rels=(ds.fact,))
+        self.view = db.views(qs, maintain=True, roots=roots,
+                             warm_rels=(ds.fact,))
+        self.maintained = self.view.maintained
         self.theta: Optional[np.ndarray] = None
         self.C: Optional[np.ndarray] = None
         self.N = 0.0
 
     def fit(self, db=None) -> np.ndarray:
-        """Materialize the covar batch (full scan) and solve."""
+        """Materialize the covar batch (full scan) and solve.  Re-fitting
+        rescans and publishes a fresh epoch (like the legacy path)."""
         self.maintained.init(db if db is not None else self.ds.db)
         return self._refresh()
 
     def update(self, update: DeltaBatchUpdate) -> np.ndarray:
         """Fold an update batch into the maintained views and re-solve."""
-        self.maintained.apply(update)
+        self.view.apply(update)
         return self._refresh()
 
     def update_fact(self, inserts: Optional[Mapping[str, np.ndarray]] = None,

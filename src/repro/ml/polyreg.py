@@ -16,7 +16,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import COUNT, Engine, Pow, Var, agg, query
+from repro.api import Database, ExecutionConfig, connect
+from repro.core import COUNT, Pow, Var, agg, query
 from repro.core.aggregates import Aggregate, ProductAgg, Term
 from repro.data.datasets import Dataset
 
@@ -78,13 +79,17 @@ def polyreg_queries(ds: Dataset, degree: int = 2,
 
 def compute_poly_covar(ds: Dataset, degree: int = 2,
                        attrs: Optional[Sequence[str]] = None,
-                       block_size: int = 4096):
+                       block_size: int = 4096, backend: str = "xla",
+                       interpret: Optional[bool] = None,
+                       config: Optional[ExecutionConfig] = None,
+                       database: Optional[Database] = None):
     """Returns (C (p,p), b (p,), N, layout, batch) for the normal equations
     C/N θ = b/N (+ ridge)."""
     qs, layout, mono_list = polyreg_queries(ds, degree, attrs)
-    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
-    batch = eng.compile(qs, block_size=block_size)
-    out = np.asarray(batch(ds.db)[qs[0].name], np.float64)
+    db = database or connect(ds, config=config or ExecutionConfig(
+        block_size=block_size, backend=backend, interpret=interpret))
+    views = db.views(qs)
+    out = np.asarray(views.run()[qs[0].name], np.float64)
     val = {m: out[i] for i, m in enumerate(mono_list)}
 
     p = len(layout.features)
@@ -95,7 +100,7 @@ def compute_poly_covar(ds: Dataset, degree: int = 2,
         for j in range(i, p):
             C[i, j] = C[j, i] = val[_mono_product(f, layout.features[j])]
     N = val[()]
-    return C, b, N, layout, batch
+    return C, b, N, layout, views.compiled
 
 
 def fit_polyreg(ds: Dataset, degree: int = 2, lam: float = 1e-3,

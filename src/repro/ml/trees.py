@@ -32,7 +32,8 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Delta, Engine, Lambda, Pow, Var, agg, query
+from repro.api import Database, ExecutionConfig, ViewHandle, connect
+from repro.core import Delta, Lambda, Pow, Var, agg, query
 from repro.core.aggregates import Param
 from repro.data.datasets import Dataset
 
@@ -90,11 +91,14 @@ def build_tree_features(ds: Dataset, label: Optional[str],
 def build_tree_batch(ds: Dataset, features: Sequence[SplitFeature], task: str,
                      label: str, n_classes: int, *, node_batch: bool = True,
                      block_size: int = 4096, multi_root: bool = True,
-                     backend: str = "xla", interpret: Optional[bool] = None):
-    """Compile the per-feature split-statistics batch shared by a whole tree
-    (or forest).  One query per feature: [COUNT, SUM(y), SUM(y²)] (regression)
-    or [COUNT, per-class counts] (classification) under the node-condition
-    mask product, grouped by the feature's code domain."""
+                     backend: str = "xla", interpret: Optional[bool] = None,
+                     config: Optional[ExecutionConfig] = None,
+                     database: Optional[Database] = None):
+    """Register the per-feature split-statistics batch shared by a whole tree
+    (or forest) as session views.  One query per feature: [COUNT, SUM(y),
+    SUM(y²)] (regression) or [COUNT, per-class counts] (classification) under
+    the node-condition mask product, grouped by the feature's code domain.
+    Returns ``(ViewHandle, queries)``."""
     cond = [_mask_term(f.attr, batched=node_batch) for f in features]
     queries = []
     for f in features:
@@ -105,10 +109,10 @@ def build_tree_batch(ds: Dataset, features: Sequence[SplitFeature], task: str,
             aggs = [agg(*cond)] + [agg(Delta(label, "==", c), *cond)
                                    for c in range(n_classes)]
         queries.append(query(f"split_{f.attr}", [f.attr], aggs))
-    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
-    batch = eng.compile(queries, multi_root=multi_root, block_size=block_size,
-                        backend=backend, interpret=interpret)
-    return batch, queries
+    db = database or connect(ds, config=config or ExecutionConfig(
+        multi_root=multi_root, block_size=block_size, backend=backend,
+        interpret=interpret))
+    return db.views(queries), queries
 
 
 def stack_mask_params(features: Sequence[SplitFeature],
@@ -178,7 +182,9 @@ class DecisionTree:
     same level-synchronous algorithm and produce identical trees.
     ``allowed_attrs`` restricts the split search to a feature subset (random
     forests pass per-tree subsets while sharing one compiled batch); ``batch``
-    injects a pre-compiled shared batch (see ``ml/forest.py``).
+    injects a pre-registered shared :class:`~repro.api.ViewHandle` (see
+    ``ml/forest.py``); ``config``/``database`` thread a session's
+    :class:`~repro.api.ExecutionConfig` instead of the legacy kwargs.
     """
 
     def __init__(self, ds: Dataset, task: str = "regression",
@@ -189,7 +195,9 @@ class DecisionTree:
                  multi_root: bool = True, backend: str = "xla",
                  interpret: Optional[bool] = None, node_batch: bool = True,
                  allowed_attrs: Optional[Sequence[str]] = None,
-                 batch=None):
+                 batch: Optional[ViewHandle] = None,
+                 config: Optional[ExecutionConfig] = None,
+                 database: Optional[Database] = None):
         self.ds = ds
         self.task = task
         self.label = label or (ds.label if task == "regression" else None)
@@ -214,9 +222,24 @@ class DecisionTree:
             batch, queries = build_tree_batch(
                 ds, self.features, task, self.label, self.n_classes,
                 node_batch=node_batch, block_size=block_size,
-                multi_root=multi_root, backend=backend, interpret=interpret)
+                multi_root=multi_root, backend=backend, interpret=interpret,
+                config=config, database=database)
             self._queries = queries
-        self.batch = batch
+        elif not isinstance(batch, ViewHandle):
+            # legacy injection contract: a bare CompiledBatch (one-release
+            # shim, like Engine.compile itself)
+            import warnings
+
+            from repro.core.engine import EngineDeprecationWarning
+            warnings.warn(
+                "passing a CompiledBatch as DecisionTree(batch=...) is "
+                "deprecated; pass the ViewHandle from build_tree_batch "
+                "(repro.connect session) instead", EngineDeprecationWarning,
+                stacklevel=2)
+            batch = ViewHandle(connect(ds), batch)
+        self.view: ViewHandle = batch
+        #: the underlying CompiledBatch (schedule/stats/dispatch counters)
+        self.batch = batch.compiled
         self.n_aggregates = sum(
             (3 if task == "regression" else 1 + self.n_classes)
             * self.ds.schema.domain(f.attr) for f in self.features)
@@ -298,10 +321,10 @@ class DecisionTree:
         mask_list = self.frontier_masks()
         if self.node_batch:
             params = stack_mask_params(self.features, mask_list)
-            outputs = self.batch.run_batched(self.ds.db, params)
+            outputs = self.view.run_batched(params)
             return {f.attr: np.asarray(outputs[f"split_{f.attr}"], np.float64)
                     for f in self.features}
-        per_node = [self.batch(self.ds.db, params=self._node_params(m))
+        per_node = [self.view.run(params=self._node_params(m))
                     for m in mask_list]
         return {f.attr: np.stack([np.asarray(o[f"split_{f.attr}"], np.float64)
                                   for o in per_node])

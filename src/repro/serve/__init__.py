@@ -9,6 +9,7 @@ into a long-lived service under concurrent reads and update streams.
 (batched greedy decoding; used by ``examples/serve_lm.py``).
 """
 
+from repro.core.ivm import EpochEvictedError
 from repro.serve.views import EpochView, ViewServer
 
-__all__ = ["EpochView", "ViewServer"]
+__all__ = ["EpochEvictedError", "EpochView", "ViewServer"]

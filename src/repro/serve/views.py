@@ -7,8 +7,8 @@ readers always see mutually consistent aggregates while update batches fold
 in behind them (DESIGN.md §8).  This is what lets the engine sit under live
 analytics traffic instead of running as a batch job:
 
-    srv = ViewServer(eng.compile_incremental(queries))
-    srv.start(db)                         # full scan, publishes epoch 0
+    live = db.views(queries, maintain=True)   # repro.connect(...) session
+    srv = live.serve(max_pinned_epochs=8)     # started: epoch 0 published
     with srv.snapshot() as snap:          # reader: frozen epoch
         a = snap.results()["q_count"]
         ...                               # writer may publish e+1 here
@@ -62,8 +62,18 @@ class ViewServer:
     are wait-free against writers and pin their epoch for as long as the
     snapshot handle lives."""
 
-    def __init__(self, maintained):
+    def __init__(self, maintained, max_pinned_epochs: Optional[int] = None):
+        """``max_pinned_epochs`` bounds how many epochs readers may keep
+        device-resident at once (long-lived pins retain whole epochs of
+        device memory): past the budget the least-recently-used pin is
+        evicted, and reads through an evicted snapshot raise
+        :class:`~repro.core.ivm.EpochEvictedError` with a clear message.
+        None leaves pins unbounded (trusted traffic only)."""
+        if max_pinned_epochs is not None and max_pinned_epochs < 1:
+            raise ValueError("max_pinned_epochs must be >= 1 (or None)")
         self.maintained = maintained
+        if max_pinned_epochs is not None:
+            self.maintained.max_pinned_epochs = max_pinned_epochs
         self._write_lock = threading.Lock()
         self.n_reads = 0
         self.n_updates = 0
@@ -135,4 +145,6 @@ class ViewServer:
                 "n_updates": self.n_updates,
                 "n_rejected_updates": self.n_rejected_updates,
                 "n_pinned_epochs": self.maintained.n_pinned_epochs,
+                "n_evicted_pins": self.maintained.n_evicted_pins,
+                "max_pinned_epochs": self.maintained.max_pinned_epochs,
                 "n_delta_scan_steps": self.maintained.n_delta_scan_steps}

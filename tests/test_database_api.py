@@ -1,0 +1,478 @@
+"""The session facade (`repro.connect` → `Database` → `ViewHandle`,
+DESIGN.md §9): equivalence against the legacy `Engine.compile` /
+`compile_incremental` / `run_sharded` paths (bit-identical results on both
+lowering backends), deprecation-shim warnings, the unified `explain()`
+report, config threading into the cubes/Chow-Liu applications, and the
+serving pin budget (LRU epoch eviction) under a background updater."""
+
+import threading
+import warnings
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import (COUNT, Delta, Engine, EngineDeprecationWarning, Var,
+                        agg, query, schema, sum_of)
+from repro.core.ivm import EpochEvictedError
+from repro.data import DeltaBatchUpdate, apply_delta, from_numpy
+from repro.data import datasets as D
+
+BACKENDS = [("xla", None), ("pallas", True)]  # (backend, interpret)
+
+
+def legacy_engine(S, db, **kw):
+    return Engine(S, sizes=db.sizes(), **kw)
+
+
+def legacy_compile(eng, queries, **kw):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return eng.compile(queries, **kw)
+
+
+def legacy_compile_incremental(eng, queries, **kw):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return eng.compile_incremental(queries, **kw)
+
+
+def make_schema():
+    return schema(
+        [("x1", "categorical", 3), ("x2", "key", 4), ("x3", "key", 5),
+         ("x4", "categorical", 3), ("u", "continuous", 0)],
+        [("R1", ["x1", "x2"]), ("R2", ["x2", "x3", "u"]), ("R3", ["x3", "x4"])])
+
+
+def make_tables(seed=0, n1=17, n2=29, n3=13):
+    rng = np.random.default_rng(seed)
+    return {"R1": {"x1": rng.integers(0, 3, n1), "x2": rng.integers(0, 4, n1)},
+            "R2": {"x2": rng.integers(0, 4, n2), "x3": rng.integers(0, 5, n2),
+                   "u": rng.normal(size=n2).astype(np.float32)},
+            "R3": {"x3": rng.integers(0, 5, n3), "x4": rng.integers(0, 3, n3)}}
+
+
+QUERIES = [
+    query("q_count", [], [COUNT]),
+    query("q_g1", ["x1"], [COUNT, sum_of("u")]),
+    query("q_delta", ["x4"], [agg(Var("u"), Delta("x1", "==", 1))]),
+]
+
+
+def assert_identical(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=k)
+
+
+def assert_close(a, b):
+    """For folded-state vs from-scratch oracles: equal up to fp32 summation
+    order (the IVM contract, DESIGN.md §8)."""
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   rtol=1e-4, atol=1e-4, err_msg=k)
+
+
+@pytest.fixture(scope="module")
+def fav():
+    return D.make("favorita", scale=0.02)
+
+
+# ---------------------------------------------------------------- equivalence
+
+@pytest.mark.parametrize("backend,interpret", BACKENDS)
+def test_ridge_batch_identical_to_legacy(fav, backend, interpret):
+    """Database-path covar results are bit-identical to Engine.compile."""
+    from repro.ml.covar import covar_queries
+    qs, _ = covar_queries(fav)
+    legacy = legacy_compile(
+        Engine(fav.schema, edges=fav.edges, sizes=fav.db.sizes()), qs,
+        backend=backend, interpret=interpret)
+    want = legacy(fav.db)
+    db = repro.connect(fav, config=repro.ExecutionConfig(
+        backend=backend, interpret=interpret))
+    got = db.views(qs).run()
+    assert_identical(got, want)
+
+
+@pytest.mark.parametrize("backend,interpret", BACKENDS)
+def test_tree_frontier_identical_to_legacy(fav, backend, interpret):
+    """run_batched through the facade == legacy CompiledBatch.run_batched."""
+    from repro.ml.trees import build_tree_batch, build_tree_features
+    feats = build_tree_features(fav, None, None)
+    cfg = repro.ExecutionConfig(backend=backend, interpret=interpret)
+    handle, queries = build_tree_batch(fav, feats, "regression", fav.label, 0,
+                                       config=cfg)
+    legacy = legacy_compile(
+        Engine(fav.schema, edges=fav.edges, sizes=fav.db.sizes()), queries,
+        backend=backend, interpret=interpret)
+    rng = np.random.default_rng(7)
+    params = {f"mask_{f.attr}": rng.integers(0, 2, (3, f.domain))
+              .astype(np.float32) for f in feats}
+    want = legacy.run_batched(fav.db, dict(params))
+    got = handle.run_batched(dict(params))
+    assert_identical(got, want)
+
+
+@pytest.mark.parametrize("backend,interpret", BACKENDS)
+def test_streaming_identical_to_legacy(backend, interpret):
+    """Maintained views through the facade publish bit-identical state to
+    the legacy compile_incremental path, update batch by update batch."""
+    S = make_schema()
+    db = from_numpy(S, make_tables())
+    legacy = legacy_compile_incremental(
+        legacy_engine(S, db), QUERIES, block_size=8, backend=backend,
+        interpret=interpret)
+    legacy.init(db)
+    session = repro.connect(S, data=db, config=repro.ExecutionConfig(
+        backend=backend, interpret=interpret, block_size=8))
+    view = session.views(QUERIES, maintain=True)
+    assert_identical(view.run(), legacy.results())
+
+    rng = np.random.default_rng(3)
+    n1 = 17
+    for k in (2, 5):
+        upd = (DeltaBatchUpdate()
+               .insert("R2", {"x2": rng.integers(0, 4, k),
+                              "x3": rng.integers(0, 5, k),
+                              "u": rng.normal(size=k).astype(np.float32)})
+               .delete("R1", rng.choice(n1, 2, replace=False)))
+        n1 -= 2
+        legacy.apply(upd)
+        got = view.apply(upd)
+        assert_identical(got, legacy.results())
+        assert view.maintained.epoch == legacy.epoch
+
+
+def test_sharded_identical_to_legacy(fav):
+    """config.mesh makes run() domain-parallel; results are bit-identical
+    to the legacy CompiledBatch.run_sharded entry point."""
+    import jax
+    from repro.ml.covar import covar_queries
+    qs, _ = covar_queries(fav)
+    mesh = jax.make_mesh((1,), ("data",))
+    legacy = legacy_compile(
+        Engine(fav.schema, edges=fav.edges, sizes=fav.db.sizes()), qs)
+    want = legacy.run_sharded(fav.db, mesh)
+    db = repro.connect(fav, config=repro.ExecutionConfig(mesh=mesh))
+    v = db.views(qs)
+    got = v.run()
+    assert_identical(got, want)
+    # the sharded runner is built once and cached across run() calls
+    assert_identical(v.run(), want)
+
+
+# ------------------------------------------------------------------- shims
+
+def test_legacy_compile_warns():
+    S = make_schema()
+    db = from_numpy(S, make_tables())
+    eng = legacy_engine(S, db)
+    with pytest.warns(EngineDeprecationWarning, match="repro.connect"):
+        eng.compile(QUERIES, block_size=8)
+    with pytest.warns(EngineDeprecationWarning, match="maintain=True"):
+        eng.compile_incremental(QUERIES, block_size=8)
+    # the facade itself never routes through the deprecated shims
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        sess = repro.connect(S, data=db,
+                             config=repro.ExecutionConfig(block_size=8))
+        sess.views(QUERIES).run()
+        sess.views(QUERIES, maintain=True).run()
+
+
+# ---------------------------------------------------------- facade semantics
+
+def test_connect_forms_and_errors():
+    S = make_schema()
+    T = make_tables()
+    db = from_numpy(S, T)
+    out1 = repro.connect(S, tables=T).views(QUERIES).run()
+    out2 = repro.connect(db).views(QUERIES).run()
+    assert_identical(out1, out2)
+    with pytest.raises(ValueError, match="tables="):
+        repro.connect(S)
+    with pytest.raises(TypeError, match="cannot connect"):
+        repro.connect(42)
+    with pytest.raises(ValueError, match="backend"):
+        repro.ExecutionConfig(backend="cuda")
+    with pytest.raises(ValueError, match="max_pinned_epochs"):
+        repro.ExecutionConfig(max_pinned_epochs=0)
+
+
+def test_viewhandle_mode_errors():
+    S = make_schema()
+    db = repro.connect(S, tables=make_tables(),
+                       config=repro.ExecutionConfig(block_size=8))
+    batch_view = db.views(QUERIES)
+    with pytest.raises(ValueError, match="maintain=True"):
+        batch_view.apply(DeltaBatchUpdate())
+    with pytest.raises(ValueError, match="maintain=True"):
+        batch_view.serve()
+    live = db.views(QUERIES, maintain=True)
+    with pytest.raises(ValueError, match="param-batch"):
+        live.run_batched({})
+    import jax
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="sharded IVM"):
+        db.with_config(mesh=mesh).views(QUERIES, maintain=True)
+
+
+def test_review_hardening(fav):
+    """Regressions from review: serve() validates the budget on every call;
+    maintained run() refuses silently-dropped params; a legacy CompiledBatch
+    still injects into DecisionTree (with the deprecation warning); the
+    sharded frontier pads the node axis so runner caching is log2-bounded."""
+    S = make_schema()
+    session = repro.connect(S, tables=make_tables(),
+                            config=repro.ExecutionConfig(block_size=8))
+    live = session.views(QUERIES, maintain=True)
+    live.serve(max_pinned_epochs=2)
+    with pytest.raises(ValueError, match="max_pinned_epochs"):
+        live.serve(max_pinned_epochs=0)
+    with pytest.raises(ValueError, match="bind params"):
+        live.run(params={"t": np.int32(1)})
+
+    from repro.ml.trees import DecisionTree
+    legacy_dt_batch = None
+
+    def build_legacy():
+        from repro.ml.trees import build_tree_batch, build_tree_features
+        feats = build_tree_features(fav, None, None)
+        handle, queries = build_tree_batch(fav, feats, "regression",
+                                           fav.label, 0)
+        return legacy_compile(
+            Engine(fav.schema, edges=fav.edges, sizes=fav.db.sizes()),
+            queries)
+
+    legacy_dt_batch = build_legacy()
+    with pytest.warns(EngineDeprecationWarning, match="ViewHandle"):
+        dt = DecisionTree(fav, task="regression", max_depth=1,
+                          min_instances=10, max_nodes=3,
+                          batch=legacy_dt_batch)
+    assert dt.batch is legacy_dt_batch
+
+
+def test_sharded_frontier_pads_nodes_to_pow2(fav):
+    """With a mesh config, run_batched pads the node axis like the local
+    path: frontiers of 3 and 4 nodes share ONE cached sharded runner, and
+    padded rows are sliced off the outputs."""
+    import jax
+    from repro.ml.trees import build_tree_batch, build_tree_features
+    feats = build_tree_features(fav, None, None)
+    mesh = jax.make_mesh((1,), ("data",))
+    handle, _ = build_tree_batch(
+        fav, feats, "regression", fav.label, 0,
+        config=repro.ExecutionConfig(mesh=mesh))
+    rng = np.random.default_rng(11)
+
+    def masks(n):
+        return {f"mask_{f.attr}": rng.integers(0, 2, (n, f.domain))
+                .astype(np.float32) for f in feats}
+
+    p3, p4 = masks(3), masks(4)
+    out3 = handle.run_batched(dict(p3))
+    assert len(handle._sharded) == 1
+    out4 = handle.run_batched(dict(p4))
+    assert len(handle._sharded) == 1          # 3 padded to 4: runner reused
+    q = f"split_{feats[0].attr}"
+    assert np.asarray(out3[q]).shape[0] == 3  # pad sliced off
+    assert np.asarray(out4[q]).shape[0] == 4
+    # equivalence with the unsharded facade path on the same params
+    local, _ = build_tree_batch(fav, feats, "regression", fav.label, 0)
+    assert_identical(out3, local.run_batched(dict(p3)))
+
+
+def test_maintained_lifecycle_and_snapshot(tmp_path):
+    S = make_schema()
+    T = make_tables()
+    session = repro.connect(S, tables=T,
+                            config=repro.ExecutionConfig(block_size=8))
+    view = session.views(QUERIES, maintain=True)
+    first = view.run()                        # full scan -> epoch 0
+    assert view.maintained.epoch == 0
+    again = view.run()                        # read, no rescan
+    assert_identical(first, again)
+
+    rng = np.random.default_rng(1)
+    upd = DeltaBatchUpdate().insert(
+        "R2", {"x2": rng.integers(0, 4, 3), "x3": rng.integers(0, 5, 3),
+               "u": rng.normal(size=3).astype(np.float32)})
+    view.apply(upd)
+    saved = {k: np.asarray(v).copy() for k, v in view.results().items()}
+    path = view.snapshot(str(tmp_path))
+    assert path
+
+    view.apply(DeltaBatchUpdate().delete("R1", np.array([0, 1])))
+    view.restore(str(tmp_path))
+    assert_identical(view.results(), saved)
+
+    # oracle: restored state equals init on the post-update database
+    oracle = apply_delta(from_numpy(S, T), upd)
+    fresh = session.views(QUERIES).compiled(oracle)
+    assert_close(view.results(), fresh)
+
+
+def test_explain_unified_report():
+    S = make_schema()
+    session = repro.connect(S, tables=make_tables(),
+                            config=repro.ExecutionConfig(block_size=8))
+    v = session.views(QUERIES)
+    rep = v.explain()
+    assert rep.mode == "batch" and rep.n_dispatches == 0
+    v.run()
+    assert v.explain().n_dispatches == 1
+    assert "scans=" in v.explain().summary()
+
+    live = session.views(QUERIES, maintain=True)
+    live.run()
+    live.apply(DeltaBatchUpdate().delete("R1", np.array([2])))
+    rep = live.explain()
+    assert rep.mode == "maintained" and rep.epoch == 1 and rep.step == 1
+    assert rep.n_delta_scan_steps > 0
+    srv = live.serve(max_pinned_epochs=4)
+    srv.read("q_count")
+    rep = live.explain()
+    assert rep.mode == "served" and rep.serving["n_reads"] == 1
+    assert rep.max_pinned_epochs == 4
+    assert "serve:" in rep.summary()
+
+
+# ---------------------------------------------------- config threading (apps)
+
+@pytest.mark.parametrize("backend,interpret", BACKENDS)
+def test_cubes_honor_backend(fav, backend, interpret):
+    """Regression: ml/cubes used to drop backend/block_size on the floor."""
+    from repro.ml import cubes
+    dims, meas = ["promo", "stype"], ["units"]
+    got = cubes.cube_via_engine(fav, dims, meas, backend=backend,
+                                interpret=interpret, block_size=512)
+    ref = cubes.cube_via_engine(fav, dims, meas)
+    for k in ref:
+        np.testing.assert_allclose(got[k], ref[k], rtol=1e-4, atol=1e-4,
+                                   err_msg=k)
+    sc = cubes.StreamingCube(fav, dims, meas, backend=backend,
+                             interpret=interpret)
+    assert sc.maintained.plan.config.backend == backend
+
+
+@pytest.mark.parametrize("backend,interpret", BACKENDS)
+def test_chowliu_honors_backend(fav, backend, interpret):
+    from repro.ml import chowliu
+    attrs = ["city", "stype", "family"]
+    got = chowliu.chow_liu(fav, attrs=attrs, backend=backend,
+                           interpret=interpret, block_size=512)
+    ref = chowliu.chow_liu(fav, attrs=attrs)
+    np.testing.assert_allclose(got.mi, ref.mi, rtol=1e-6, atol=1e-8)
+    assert got.edges == ref.edges
+
+
+def test_apps_reject_unknown_backend(fav):
+    """The sharp end of the threading regression: before the fix an invalid
+    backend was silently ignored here."""
+    from repro.ml import chowliu, cubes
+    with pytest.raises(ValueError, match="backend"):
+        cubes.cube_via_engine(fav, ["promo"], ["units"], backend="cuda")
+    with pytest.raises(ValueError, match="backend"):
+        chowliu.chow_liu(fav, attrs=["city", "stype"], backend="cuda")
+
+
+# ------------------------------------------------------- pin budget (serving)
+
+def test_pin_budget_lru_eviction_under_background_updater():
+    """With max_pinned_epochs=2, pinning a third epoch while a background
+    updater publishes new versions evicts the least-recently-used pin;
+    reads of the evicted epoch raise EpochEvictedError with a clear
+    message, the surviving pins stay frozen, and post-stream reads match
+    the from-scratch oracle."""
+    S = make_schema()
+    T = make_tables()
+    session = repro.connect(S, tables=T,
+                            config=repro.ExecutionConfig(block_size=8))
+    view = session.views(QUERIES, maintain=True)
+    srv = view.serve(max_pinned_epochs=2)
+
+    rng = np.random.default_rng(9)
+    updates = [DeltaBatchUpdate().insert(
+        "R2", {"x2": rng.integers(0, 4, 2), "x3": rng.integers(0, 5, 2),
+               "u": rng.normal(size=2).astype(np.float32)})
+        for _ in range(3)]
+
+    applied = threading.Event()
+    proceed = threading.Event()
+    failures = []
+
+    def updater():
+        try:
+            for upd in updates:
+                proceed.wait(timeout=30)
+                proceed.clear()
+                srv.apply(upd)
+                applied.set()
+        except Exception as e:     # pragma: no cover
+            failures.append(e)
+
+    t = threading.Thread(target=updater)
+    t.start()
+    pins = []                      # (ctx manager, EpochView), oldest first
+    try:
+        for _ in range(3):         # pin an epoch, then let one update publish
+            ctx = srv.snapshot()
+            pins.append((ctx, ctx.__enter__()))
+            proceed.set()
+            assert applied.wait(timeout=30)
+            applied.clear()
+    finally:
+        t.join(timeout=30)
+    assert not failures
+
+    # 3 distinct epochs pinned against a budget of 2 -> the oldest evicted
+    assert srv.stats()["n_evicted_pins"] == 1
+    assert srv.stats()["n_pinned_epochs"] == 2
+    with pytest.raises(EpochEvictedError, match="pin budget"):
+        pins[0][1].results()
+    # the most-recent surviving pins still read their frozen epochs
+    for _, snap in pins[1:]:
+        assert snap.results()["q_count"].shape == (1,)
+    for ctx, _ in pins:            # unpin of an evicted epoch is a no-op
+        ctx.__exit__(None, None, None)
+    assert srv.stats()["n_pinned_epochs"] == 0
+
+    # current-epoch reads match the from-scratch oracle
+    oracle_db = from_numpy(S, T)
+    for upd in updates:
+        oracle_db = apply_delta(oracle_db, upd)
+    fresh = session.views(QUERIES).compiled(oracle_db)
+    assert_close(srv.read(), fresh)
+
+
+def test_pin_budget_keeps_hot_pins_by_recency():
+    """LRU, not FIFO: re-reading an old pin keeps it resident while a
+    colder (less recently used) pin is evicted instead."""
+    S = make_schema()
+    session = repro.connect(S, tables=make_tables(),
+                            config=repro.ExecutionConfig(block_size=8))
+    view = session.views(QUERIES, maintain=True)
+    view.run()
+    mb = view.maintained
+    mb.max_pinned_epochs = 2
+    rng = np.random.default_rng(2)
+
+    def tick():
+        view.apply(DeltaBatchUpdate().insert(
+            "R2", {"x2": rng.integers(0, 4, 1), "x3": rng.integers(0, 5, 1),
+                   "u": rng.normal(size=1).astype(np.float32)}))
+
+    e0 = mb.pin()
+    tick()
+    e1 = mb.pin()
+    assert (e0, e1) == (0, 1)
+    mb.results(epoch=e0)           # LRU touch: e0 hotter than e1
+    tick()
+    mb.pin()                       # budget 2: evicts e1 (the cold one)
+    mb.results(epoch=e0)           # still resident
+    with pytest.raises(EpochEvictedError):
+        mb.results(epoch=e1)
+    assert mb.n_evicted_pins == 1
