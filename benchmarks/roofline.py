@@ -25,9 +25,55 @@ import sys
 import time
 from typing import Any, Dict, Optional, Tuple
 
-PEAK_FLOPS = 197e12     # bf16 / chip (TPU v5e-class, per brief)
-HBM_BW = 819e9          # B/s per chip
-LINK_BW = 50e9          # B/s per ICI link
+#: per-chip peak defaults by host platform.  TPU numbers are v5e-class (per
+#: brief); CPU numbers are honest host-class ceilings so CI utilization
+#: reports are meaningful instead of vanishing against TPU constants.
+PLATFORM_PEAKS = {
+    "tpu": {"flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9},
+    "gpu": {"flops": 312e12, "hbm_bw": 2039e9, "link_bw": 300e9},  # A100-class
+    "cpu": {"flops": 2e11,   "hbm_bw": 40e9,   "link_bw": 10e9},   # host-class
+}
+
+
+def detect_platform() -> str:
+    """The host accelerator platform (``jax.default_backend()``), "cpu" when
+    jax is unavailable.  Overridable via ``REPRO_PLATFORM``."""
+    env = os.environ.get("REPRO_PLATFORM")
+    if env:
+        return env
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:
+        return "cpu"
+
+
+def peaks(platform: Optional[str] = None, *,
+          flops: Optional[float] = None, hbm_bw: Optional[float] = None,
+          link_bw: Optional[float] = None) -> Dict[str, Any]:
+    """Per-chip peak FLOPs / HBM / link bandwidth for ``platform`` (default:
+    auto-detected host backend).  Precedence per value: explicit argument >
+    env (``REPRO_PEAK_FLOPS`` / ``REPRO_HBM_BW`` / ``REPRO_LINK_BW``) >
+    platform table."""
+    plat = platform or detect_platform()
+    base = PLATFORM_PEAKS.get(plat, PLATFORM_PEAKS["cpu"])
+
+    def pick(arg, env_key, table_val):
+        if arg is not None:
+            return float(arg)
+        env = os.environ.get(env_key)
+        return float(env) if env else float(table_val)
+
+    return {"platform": plat,
+            "flops": pick(flops, "REPRO_PEAK_FLOPS", base["flops"]),
+            "hbm_bw": pick(hbm_bw, "REPRO_HBM_BW", base["hbm_bw"]),
+            "link_bw": pick(link_bw, "REPRO_LINK_BW", base["link_bw"])}
+
+
+_P = peaks()
+PEAK_FLOPS = _P["flops"]    # per chip (auto-detected platform; env-overridable)
+HBM_BW = _P["hbm_bw"]       # B/s per chip
+LINK_BW = _P["link_bw"]     # B/s per ICI link
 
 
 def measure_costs(arch: str, shape_name: str, n_layers: int,
@@ -238,7 +284,17 @@ def main(argv=None):
     ap.add_argument("--shape")
     ap.add_argument("--out", default="reports/roofline")
     ap.add_argument("--table", action="store_true")
+    ap.add_argument("--platform", help="peak table to use (tpu/gpu/cpu; "
+                    "default: auto-detected host backend)")
+    ap.add_argument("--peak-flops", type=float, help="per-chip peak FLOP/s")
+    ap.add_argument("--hbm-bw", type=float, help="per-chip HBM B/s")
+    ap.add_argument("--link-bw", type=float, help="per-link ICI B/s")
     args = ap.parse_args(argv)
+
+    global PEAK_FLOPS, HBM_BW, LINK_BW
+    p = peaks(args.platform, flops=args.peak_flops, hbm_bw=args.hbm_bw,
+              link_bw=args.link_bw)
+    PEAK_FLOPS, HBM_BW, LINK_BW = p["flops"], p["hbm_bw"], p["link_bw"]
 
     if args.table:
         write_table(args.out, os.path.join(args.out, "roofline_table.md"))

@@ -38,6 +38,12 @@ def main() -> None:
             json.dump(bench_ivm.JSON_PAYLOAD, f, indent=1, sort_keys=True)
         print(f"# wrote {path}", file=sys.stderr)
 
+    if bench_kernels.JSON_PAYLOAD:
+        path = os.environ.get("BENCH_KERNELS_JSON", "BENCH_kernels.json")
+        with open(path, "w") as f:
+            json.dump(bench_kernels.JSON_PAYLOAD, f, indent=1, sort_keys=True)
+        print(f"# wrote {path}", file=sys.stderr)
+
     # dry-run + roofline tables (read from reports/, written by
     # repro.launch.dryrun --all and benchmarks.roofline)
     try:

@@ -49,9 +49,21 @@ class ExecutionConfig:
 
     Compilation: ``backend`` selects the lowering path ("xla": blocked
     lax.scan; "pallas": MXU kernels, ``interpret`` controlling CPU interpret
-    mode — None auto-detects); ``block_size`` is the xla backend's scan
-    block; ``fuse_scans`` toggles shared-scan fusion; ``multi_root`` enables
-    the paper's find-roots layer.
+    mode — None auto-detects); ``fuse_scans`` toggles shared-scan fusion;
+    ``multi_root`` enables the paper's find-roots layer.
+
+    Kernel blocking: ``block_size`` is the outer lax.scan row block,
+    ``block_rows`` the Pallas kernel row grid (a positive multiple of 8 —
+    the MXU sublane tile).  Either may be the string ``"auto"``: blocking is
+    then resolved per scan step by the compile-time autotuner
+    (``core/autotune.py``), which times candidate grids against the step's
+    signature and persists winners to an on-disk cache
+    (``autotune_cache`` path > ``REPRO_AUTOTUNE_CACHE`` env >
+    ``~/.cache/repro/autotune.json``) so warm sessions never re-tune; the
+    resolution shows up in ``ViewHandle.explain()``.  ``fuse_kernels``
+    (default) collapses each step's bucket/hist reductions into ONE fused
+    Pallas launch per row block; ``double_buffer`` enables that kernel's
+    manual HBM→VMEM DMA pipeline (DESIGN.md §10).
 
     Placement: a non-None ``mesh`` makes every ``ViewHandle.run`` /
     ``run_batched`` domain-parallel over ``mesh_axis`` (``shard_rel``
@@ -69,9 +81,13 @@ class ExecutionConfig:
     """
 
     backend: str = "xla"
-    block_size: int = 4096
+    block_size: object = 4096               # int | "auto"
     interpret: Optional[bool] = None
     fuse_scans: bool = True
+    block_rows: object = 512                # int (multiple of 8) | "auto"
+    fuse_kernels: bool = True
+    double_buffer: bool = True
+    autotune_cache: Optional[str] = None
     multi_root: bool = True
     mesh: Optional[object] = None           # jax.sharding.Mesh
     mesh_axis: str = "data"
@@ -80,11 +96,12 @@ class ExecutionConfig:
     max_pinned_epochs: Optional[int] = None
 
     def __post_init__(self):
+        from repro.core.plan import validate_blocking
+
         if self.backend not in ("xla", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r} "
                              "(expected 'xla' or 'pallas')")
-        if self.block_size < 1:
-            raise ValueError("block_size must be >= 1")
+        validate_blocking(self.block_size, self.block_rows)
         if self.max_pinned_epochs is not None and self.max_pinned_epochs < 1:
             raise ValueError("max_pinned_epochs must be >= 1 (or None)")
         if self.mesh is not None and self.mesh_axis not in self.mesh.shape:
@@ -99,7 +116,10 @@ class ExecutionConfig:
         """The compile-stage subset, as `Engine._compile` keywords."""
         return dict(multi_root=self.multi_root, block_size=self.block_size,
                     backend=self.backend, interpret=self.interpret,
-                    fuse_scans=self.fuse_scans)
+                    fuse_scans=self.fuse_scans, block_rows=self.block_rows,
+                    fuse_kernels=self.fuse_kernels,
+                    double_buffer=self.double_buffer,
+                    autotune_cache=self.autotune_cache)
 
 
 @dataclasses.dataclass
@@ -125,6 +145,9 @@ class ViewReport:
     max_pinned_epochs: Optional[int] = None
     # serving counters (None until serve())
     serving: Optional[Dict[str, int]] = None
+    # per-step blocking resolution from the last bind with "auto" blocking
+    # (None when blocking is static or nothing has bound yet)
+    autotune: Optional[list] = None
 
     def summary(self) -> str:
         lines = [f"[{self.mode}] backend={self.backend}"
@@ -146,6 +169,13 @@ class ViewReport:
             lines.append(f"  serve: reads={s['n_reads']} "
                          f"updates={s['n_updates']} "
                          f"rejected={s['n_rejected_updates']}")
+        if self.autotune:
+            parts = ", ".join(
+                f"{a['rel']}: bs={a['block_size']} br={a['block_rows']}"
+                + (" (cached)" if a["from_cache"] else "")
+                + (" (fallback)" if a.get("fallback") else "")
+                for a in self.autotune)
+            lines.append(f"  autotune: {parts}")
         return "\n".join(lines)
 
 
@@ -357,7 +387,8 @@ class ViewHandle:
         rep = ViewReport(
             mode="batch", backend=cfg.backend,
             sharded=cfg.mesh is not None, batch=self.compiled.stats,
-            n_dispatches=self.compiled.n_dispatches)
+            n_dispatches=self.compiled.n_dispatches,
+            autotune=self.compiled.plan.last_autotune)
         mb = self._maintained
         if mb is not None:
             rep.mode = "served" if self._server is not None else "maintained"

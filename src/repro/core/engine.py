@@ -58,12 +58,16 @@ class BatchStats:
     n_scan_steps: int
     n_fused_scans: int
     roots: Dict[str, str]
+    #: static kernel-launch sites per full pass (pallas; 0 for xla) — the
+    #: quantity launch fusion shrinks to one per scan step
+    n_kernel_launches: int = 0
 
     def summary(self) -> str:
         return (f"A={self.n_app_aggregates} I={self.n_intermediate_cols} "
                 f"V={self.n_views} (pre-merge {self.n_views_premerge}) "
                 f"G={self.n_groups} levels={self.group_levels} "
-                f"scans={self.n_scan_steps} (fused {self.n_fused_scans})")
+                f"scans={self.n_scan_steps} (fused {self.n_fused_scans}) "
+                f"launches={self.n_kernel_launches}")
 
 
 class CompiledBatch:
@@ -96,6 +100,7 @@ class CompiledBatch:
             n_scan_steps=sched.n_scans,
             n_fused_scans=sched.n_fused_groups,
             roots=self.roots,
+            n_kernel_launches=self.plan.n_kernel_launches(),
         )
 
     @property
@@ -227,8 +232,11 @@ class Engine:
             self.tree = JoinTree.build(schema, self.sizes)
 
     def compile(self, queries: Sequence[Query], *, multi_root: bool = True,
-                block_size: int = 4096, backend: str = "xla",
+                block_size=4096, backend: str = "xla",
                 interpret: Optional[bool] = None, fuse_scans: bool = True,
+                block_rows=512, fuse_kernels: bool = True,
+                double_buffer: bool = True,
+                autotune_cache: Optional[str] = None,
                 root_override: Optional[Dict[str, str]] = None) -> CompiledBatch:
         """Deprecated shim over :meth:`_compile` — use the session facade:
         ``repro.connect(..., config=ExecutionConfig(...)).views(queries)``."""
@@ -240,16 +248,30 @@ class Engine:
         return self._compile(queries, multi_root=multi_root,
                              block_size=block_size, backend=backend,
                              interpret=interpret, fuse_scans=fuse_scans,
+                             block_rows=block_rows, fuse_kernels=fuse_kernels,
+                             double_buffer=double_buffer,
+                             autotune_cache=autotune_cache,
                              root_override=root_override)
 
     def _compile(self, queries: Sequence[Query], *, multi_root: bool = True,
-                 block_size: int = 4096, backend: str = "xla",
+                 block_size=4096, backend: str = "xla",
                  interpret: Optional[bool] = None, fuse_scans: bool = True,
+                 block_rows=512, fuse_kernels: bool = True,
+                 double_buffer: bool = True,
+                 autotune_cache: Optional[str] = None,
                  root_override: Optional[Dict[str, str]] = None) -> CompiledBatch:
         """Compile a query batch.  ``backend`` selects the lowering path
         (``"xla"``: blocked lax.scan; ``"pallas"``: MXU kernels, with
         ``interpret`` controlling CPU interpret mode — None auto-detects);
-        ``fuse_scans`` toggles the scheduler's shared-scan fusion."""
+        ``fuse_scans`` toggles the scheduler's shared-scan fusion.
+
+        Blocking: ``block_size`` is the outer lax.scan row block,
+        ``block_rows`` the Pallas kernel row grid — either may be the string
+        ``"auto"`` to defer to the bind-time autotuner (``core/autotune.py``,
+        cache path overridable via ``autotune_cache``).  ``fuse_kernels``
+        collapses each step's bucket/hist reductions into one fused launch
+        per row block; ``double_buffer`` enables its manual HBM→VMEM DMA
+        pipeline (DESIGN.md §10)."""
         if root_override is not None:
             roots = dict(root_override)
         elif multi_root:
@@ -259,14 +281,20 @@ class Engine:
         result = push_down(self.tree, queries, roots)
         groups = group_views(result)
         cfg = PlanConfig(block_size=block_size, backend=backend,
-                         interpret=interpret, fuse_scans=fuse_scans)
+                         interpret=interpret, fuse_scans=fuse_scans,
+                         block_rows=block_rows, fuse_kernels=fuse_kernels,
+                         double_buffer=double_buffer,
+                         autotune_cache=autotune_cache)
         return CompiledBatch(self.schema, self.tree, result, groups, cfg, roots)
 
     def compile_incremental(self, queries: Sequence[Query], *,
-                            multi_root: bool = True, block_size: int = 4096,
+                            multi_root: bool = True, block_size=4096,
                             backend: str = "xla",
                             interpret: Optional[bool] = None,
-                            fuse_scans: bool = True,
+                            fuse_scans: bool = True, block_rows=512,
+                            fuse_kernels: bool = True,
+                            double_buffer: bool = True,
+                            autotune_cache: Optional[str] = None,
                             root_override: Optional[Dict[str, str]] = None,
                             warm_rels: Sequence[str] = ()):
         """Deprecated shim over :meth:`_compile_incremental` — use
@@ -279,13 +307,18 @@ class Engine:
         return self._compile_incremental(
             queries, multi_root=multi_root, block_size=block_size,
             backend=backend, interpret=interpret, fuse_scans=fuse_scans,
+            block_rows=block_rows, fuse_kernels=fuse_kernels,
+            double_buffer=double_buffer, autotune_cache=autotune_cache,
             root_override=root_override, warm_rels=warm_rels)
 
     def _compile_incremental(self, queries: Sequence[Query], *,
-                             multi_root: bool = True, block_size: int = 4096,
+                             multi_root: bool = True, block_size=4096,
                              backend: str = "xla",
                              interpret: Optional[bool] = None,
-                             fuse_scans: bool = True,
+                             fuse_scans: bool = True, block_rows=512,
+                             fuse_kernels: bool = True,
+                             double_buffer: bool = True,
+                             autotune_cache: Optional[str] = None,
                              root_override: Optional[Dict[str, str]] = None,
                              warm_rels: Sequence[str] = ()):
         """Compile a query batch for incremental view maintenance: returns a
@@ -320,6 +353,10 @@ class Engine:
         batch = self._compile(queries, multi_root=multi_root,
                               block_size=block_size, backend=backend,
                               interpret=interpret, fuse_scans=fuse_scans,
+                              block_rows=block_rows,
+                              fuse_kernels=fuse_kernels,
+                              double_buffer=double_buffer,
+                              autotune_cache=autotune_cache,
                               root_override=root_override)
         mb = MaintainedBatch(batch)
         for rel in warm_rels:

@@ -524,7 +524,9 @@ class MaintainedBatch:
                tuple(sorted(base_caps.items())), tuple(sorted(params)))
         if key in self._runners:
             return self._runners[key]
-        backend, cfg = self.plan.backend, self.plan.config
+        # delta ticks run without a bind-time autotune pass ("auto" blocking
+        # degrades to the static defaults — delta scans are |update|-sized)
+        backend, cfg = self.plan.backend, self.plan.concrete_config()
         n_delta = ins_pad + del_pad
 
         def run(state, rel_bufs, rel_n, base_cols, base_n, ins, del_idx,

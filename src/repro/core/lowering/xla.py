@@ -35,8 +35,12 @@ class XlaBackend:
         -1 delete, 0 padding).  ``None`` keeps the unweighted path.
         ``n_valid``/``offset`` may be Python ints or traced scalars (dynamic
         valid-row counts of capacity-padded resident relations)."""
+        from repro.core.autotune import DEFAULT_BLOCK_SIZE
+
+        block_size = (config.block_size if isinstance(config.block_size, int)
+                      else DEFAULT_BLOCK_SIZE)  # unresolved "auto" -> default
         cols_blocked, iota, B, n_pad = common.block_columns(
-            rel_cols, weights, config.block_size)
+            rel_cols, weights, block_size)
 
         # batched views carry the param-batch (node) axis in front: one
         # relation pass accumulates all N parameter settings at once

@@ -43,13 +43,38 @@ def _ceil_to(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
 
 
+def validate_blocking(block_size, block_rows) -> None:
+    """Shared validation for the two blocking knobs (PlanConfig and the
+    session ExecutionConfig raise identically).  ``"auto"`` defers either to
+    the compile-time autotuner (``core/autotune.py``)."""
+    if block_size != "auto" and (
+            not isinstance(block_size, int) or isinstance(block_size, bool)
+            or block_size < 1):
+        raise ValueError("block_size must be a positive int or 'auto'; "
+                         f"got {block_size!r}")
+    if block_rows != "auto" and (
+            not isinstance(block_rows, int) or isinstance(block_rows, bool)
+            or block_rows < 1 or block_rows % 8):
+        raise ValueError("block_rows must be a positive multiple of 8 (the "
+                         "MXU sublane tile: kernel row blocks below/off that "
+                         f"alignment cannot be lowered) or 'auto'; got "
+                         f"{block_rows!r}")
+
+
 @dataclasses.dataclass
 class PlanConfig:
-    block_size: int = 4096          # lax.scan row-block (xla backend)
+    block_size: object = 4096       # lax.scan row-block (int | "auto")
     backend: str = "xla"            # lowering backend: "xla" | "pallas"
     interpret: Optional[bool] = None  # Pallas interpret mode; None = auto
                                       # (True everywhere except real TPU)
     fuse_scans: bool = True         # shared-scan fusion across view groups
+    block_rows: object = 512        # Pallas kernel row grid (int | "auto")
+    fuse_kernels: bool = True       # whole-step fused kernel launch (pallas)
+    double_buffer: bool = True      # manual HBM→VMEM DMA pipeline (pallas)
+    autotune_cache: Optional[str] = None  # autotuner cache path override
+
+    def __post_init__(self):
+        validate_blocking(self.block_size, self.block_rows)
 
 
 class ExecutablePlan:
@@ -74,6 +99,91 @@ class ExecutablePlan:
         # param-batch (node) axis bookkeeping (DESIGN.md §7.4)
         self.batched_vids = compute_batched_vids(result.views)
         self.batched_params = batched_param_names(result.views)
+        self._autotuner = None
+        #: per-step record of the last blocking resolution (``bind`` fills
+        #: it when the config carries "auto"); surfaced by ``explain()``
+        self.last_autotune: Optional[List[Dict[str, object]]] = None
+
+    # ------------------------------------------------------------- autotune
+
+    @property
+    def autotuner(self):
+        """Lazily constructed (loads the on-disk cache once per plan)."""
+        if self._autotuner is None:
+            from repro.core.autotune import Autotuner
+            self._autotuner = Autotuner(self.config.autotune_cache)
+        return self._autotuner
+
+    def concrete_config(self) -> PlanConfig:
+        """The config with any ``"auto"`` blocking replaced by the static
+        defaults — for paths that execute without a bind-time resolution
+        (the IVM delta tick, whose scans are |delta|-sized anyway)."""
+        from repro.core import autotune as at
+
+        cfg = self.config
+        if cfg.block_size == "auto" or cfg.block_rows == "auto":
+            cfg = dataclasses.replace(
+                cfg,
+                block_size=(at.DEFAULT_BLOCK_SIZE
+                            if cfg.block_size == "auto" else cfg.block_size),
+                block_rows=(at.DEFAULT_BLOCK_ROWS
+                            if cfg.block_rows == "auto" else cfg.block_rows))
+        return cfg
+
+    def resolve_step_configs(self, n_rows: Mapping[str, int],
+                             n_nodes: Optional[int] = None) -> List[PlanConfig]:
+        """One concrete :class:`PlanConfig` per scan step.  Static blocking
+        passes the session config through untouched; ``"auto"`` resolves via
+        the autotuner, keyed per step on (relation row count, widest segment
+        layout, total payload width, node axis, backend, platform) — runs at
+        ``bind`` time, *outside* any jit trace, so timing probes are legal."""
+        cfg = self.config
+        steps = self.schedule.steps
+        if cfg.block_size != "auto" and cfg.block_rows != "auto":
+            return [cfg] * len(steps)
+        from repro.core import autotune as at
+
+        platform = jax.default_backend()
+        interpret = (bool(cfg.interpret) if cfg.interpret is not None
+                     else platform != "tpu") if cfg.backend == "pallas" else False
+        out, report = [], []
+        for step, prog in zip(steps, self.step_programs):
+            n_seg, width = 1, 0
+            for vp in prog.views:
+                lead = (n_nodes or 1) if vp.batched else 1
+                if vp.hist is not None:
+                    n_seg = max(n_seg, vp.hist.n_buckets)
+                    width += 3 * lead
+                else:
+                    if vp.seg is not None:
+                        n_seg = max(n_seg, vp.seg.n_segments)
+                    w = vp.n_aggs * lead
+                    for d in vp.pulled_dims:
+                        w *= d
+                    width += w
+            sig = at.signature_for_step(cfg.backend, platform, interpret,
+                                        n_rows[step.rel], n_seg, max(width, 1),
+                                        n_nodes)
+            res = self.autotuner.tune(sig)
+            bs = res.block_size if cfg.block_size == "auto" else cfg.block_size
+            br = res.block_rows if cfg.block_rows == "auto" else cfg.block_rows
+            out.append(dataclasses.replace(cfg, block_size=bs, block_rows=br))
+            report.append({"rel": step.rel, "key": sig.key(),
+                           "block_size": bs, "block_rows": br,
+                           "from_cache": res.from_cache,
+                           "fallback": res.fallback})
+        self.last_autotune = report
+        return out
+
+    def n_kernel_launches(self) -> int:
+        """Static kernel-launch *sites* per full pass (how many distinct
+        device kernels one scan block dispatches, summed over steps) — the
+        quantity launch fusion shrinks.  0 for the xla backend (no custom
+        kernels)."""
+        count = getattr(self.backend, "count_launches", None)
+        if count is None:
+            return 0
+        return sum(count(prog, self.config) for prog in self.step_programs)
 
     # ------------------------------------------------------------------ api
 
@@ -92,11 +202,15 @@ class ExecutablePlan:
             raise ValueError(
                 f"plan has batched params {sorted(self.batched_params)}; "
                 "bind with n_nodes (use CompiledBatch.run_batched)")
+        # "auto" blocking resolves here, once per bind, outside any trace —
+        # the closure runs with concrete per-step configs
+        step_configs = self.resolve_step_configs(n_rows, n_nodes)
 
         def run(columns: Columns, params: Params, offsets: Optional[Mapping[str, jnp.ndarray]] = None,
                 psum_axes: Optional[Mapping[str, str]] = None):
             arrays = self._run_steps(columns, params, n_rows, n_nodes,
-                                     offsets, psum_axes)
+                                     offsets, psum_axes,
+                                     step_configs=step_configs)
             return self.extract_outputs(arrays)
 
         return run
@@ -118,28 +232,34 @@ class ExecutablePlan:
             raise ValueError(
                 f"plan has batched params {sorted(self.batched_params)}; "
                 "bind with n_nodes")
+        step_configs = self.resolve_step_configs(n_rows, n_nodes)
 
         def run(columns: Columns, params: Params,
                 n_valid: Optional[Mapping[str, jnp.ndarray]] = None):
             nv = dict(n_rows)
             if n_valid:
                 nv.update(n_valid)
-            return self._run_steps(columns, params, nv, n_nodes)
+            return self._run_steps(columns, params, nv, n_nodes,
+                                   step_configs=step_configs)
 
         return run
 
     def _run_steps(self, columns: Columns, params: Params,
                    n_rows: Dict[str, int], n_nodes: Optional[int],
                    offsets: Optional[Mapping[str, jnp.ndarray]] = None,
-                   psum_axes: Optional[Mapping[str, str]] = None) -> Dict[int, jnp.ndarray]:
+                   psum_axes: Optional[Mapping[str, str]] = None,
+                   step_configs: Optional[Sequence[PlanConfig]] = None) -> Dict[int, jnp.ndarray]:
         offsets = offsets or {}
         psum_axes = psum_axes or {}
+        if step_configs is None:
+            step_configs = [self.concrete_config()] * len(self.schedule.steps)
         arrays: Dict[int, jnp.ndarray] = {}
-        for step, prog in zip(self.schedule.steps, self.step_programs):
+        for step, prog, cfg in zip(self.schedule.steps, self.step_programs,
+                                   step_configs):
             self.backend.run_step(
                 prog, columns[step.rel], arrays, params,
                 n_valid=n_rows[step.rel],
-                offset=offsets.get(step.rel, 0), config=self.config,
+                offset=offsets.get(step.rel, 0), config=cfg,
                 n_nodes=n_nodes)
             if step.rel in psum_axes:
                 for vid in step.vids:

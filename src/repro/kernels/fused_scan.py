@@ -1,0 +1,206 @@
+"""Pallas TPU kernel: whole-step fused scan-block reduction.
+
+One scheduler step may carry several *kernel-level* reductions per row block:
+one ``seg_aggregate`` per distinct local group-by key (bucket) plus one
+``tree_hist`` per histogram-pattern view.  Launching them separately re-reads
+the row block from HBM once per reduction; this kernel fuses the **union of a
+step's view buckets** into a single launch — every reduction is a one-hot
+matmul against the same VMEM-resident row block, so the block is read once
+and the MXU runs back-to-back contractions (DESIGN.md §10).
+
+Inputs are packed by the lowering backend into two arrays:
+
+  * ``codes``  (n, C) int32 — one column per reduction: the flattened
+    segment id (bucket reductions) or the histogram bucket code (hist
+    reductions);
+  * ``fpay``   (n, W) f32  — all float payloads concatenated: bucket view
+    payloads, the ``[1, y, y²]`` triples, and hist cond masks.  Static
+    :class:`ReduceSpec` offsets say which slice belongs to whom, so the
+    kernel never materializes a hist payload in HBM — ``cond ⊗ [1,y,y²]`` is
+    formed in VMEM exactly like the dedicated ``tree_hist`` kernel.
+
+Each reduction ``r`` writes its own output ``(n_segments_r, width_r)``.
+
+Two execution strategies (both bit-identical to the unfused kernels):
+
+  * **grid pipeline** (``double_buffer=False``): the standard Pallas row
+    grid — the compiler's automatic pipelining streams row blocks;
+  * **manual double buffering** (``double_buffer=True``): inputs stay in
+    HBM (``memory_space=ANY``) and the kernel drives its own two-slot
+    HBM→VMEM DMA pipeline — the copy of block ``i+1`` is started *before*
+    the compute on block ``i``, so the MXU contractions overlap the next
+    block's loads instead of stalling on them (DESIGN.md §10).
+
+Row counts pad to a ``block_rows`` multiple with zeroed payload/cond (padded
+rows contribute nothing — validity is already folded into the payloads by
+``lowering/common.view_payload``), so any ``n`` works.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.padding import pad_rows as _pad_rows
+
+
+@dataclasses.dataclass(frozen=True)
+class ReduceSpec:
+    """One fused reduction: ``kind`` "seg" sums ``fpay[:, pay_off:pay_off +
+    width]`` into ``n_segments`` rows keyed by ``codes[:, code_col]``;
+    ``kind`` "hist" builds the payload ``cond ⊗ [1, y, y²]`` in VMEM from
+    ``n_cond`` mask columns at ``pay_off`` and the y-triple at ``yk_off``
+    (output width is ``n_cond * 3``)."""
+
+    kind: str
+    code_col: int
+    n_segments: int
+    width: int
+    pay_off: int
+    n_cond: int = 0
+    yk_off: int = 0
+
+    def __post_init__(self):
+        assert self.kind in ("seg", "hist"), self.kind
+        if self.kind == "hist":
+            assert self.width == self.n_cond * 3, (self.width, self.n_cond)
+
+
+def _reduce_block(sp: ReduceSpec, codes, fpay):
+    """(bm,)-block contribution of one reduction: (n_segments, width)."""
+    bm = codes.shape[0]
+    code = codes[:, sp.code_col:sp.code_col + 1]
+    if sp.kind == "seg":
+        pay = fpay[:, sp.pay_off:sp.pay_off + sp.width]
+    else:
+        cond = fpay[:, sp.pay_off:sp.pay_off + sp.n_cond]
+        yk = fpay[:, sp.yk_off:sp.yk_off + 3]
+        # payload[r, j*3 + k] = cond[r, j] * yk[r, k] — formed in VMEM, never
+        # written back to HBM (same trick as the dedicated tree_hist kernel)
+        pay = (cond[:, :, None] * yk[:, None, :]).reshape(bm, sp.n_cond * 3)
+    onehot = (code == jax.lax.broadcasted_iota(
+        jnp.int32, (1, sp.n_segments), 1)).astype(jnp.float32)
+    return jnp.dot(onehot.T, pay, preferred_element_type=jnp.float32)
+
+
+def _grid_kernel(specs: Tuple[ReduceSpec, ...]):
+    n_r = len(specs)
+
+    def kernel(codes_ref, fpay_ref, *refs):
+        o_refs, acc_refs = refs[:n_r], refs[n_r:]
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            for acc in acc_refs:
+                acc[...] = jnp.zeros_like(acc)
+
+        codes = codes_ref[...]
+        fpay = fpay_ref[...]
+        for sp, acc in zip(specs, acc_refs):
+            acc[...] += _reduce_block(sp, codes, fpay)
+
+        @pl.when(i == pl.num_programs(0) - 1)
+        def _flush():
+            for o, acc in zip(o_refs, acc_refs):
+                o[...] = acc[...]
+
+    return kernel
+
+
+def _dbuf_kernel(specs: Tuple[ReduceSpec, ...], block_rows: int,
+                 n_blocks: int):
+    n_r = len(specs)
+
+    def kernel(codes_hbm, fpay_hbm, *o_refs):
+        def body(codes_scr, fpay_scr, code_sem, fpay_sem):
+            for o in o_refs:
+                o[...] = jnp.zeros_like(o)
+
+            def dmas(slot, blk):
+                rows = pl.ds(blk * block_rows, block_rows)
+                return (pltpu.make_async_copy(codes_hbm.at[rows],
+                                              codes_scr.at[slot],
+                                              code_sem.at[slot]),
+                        pltpu.make_async_copy(fpay_hbm.at[rows],
+                                              fpay_scr.at[slot],
+                                              fpay_sem.at[slot]))
+
+            for d in dmas(0, 0):        # warm-up: first block's copies
+                d.start()
+
+            def step(blk, _):
+                slot = jax.lax.rem(blk, 2)
+
+                @pl.when(blk + 1 < n_blocks)
+                def _prefetch():        # overlap: next block's HBM→VMEM copy
+                    for d in dmas(jax.lax.rem(blk + 1, 2), blk + 1):
+                        d.start()
+
+                for d in dmas(slot, blk):
+                    d.wait()
+                codes = codes_scr[slot]
+                fpay = fpay_scr[slot]
+                for sp, o in zip(specs, o_refs):
+                    o[...] += _reduce_block(sp, codes, fpay)
+                return _
+
+            jax.lax.fori_loop(0, n_blocks, step, None)
+
+        n_codes = codes_hbm.shape[1]
+        n_fpay = fpay_hbm.shape[1]
+        pl.run_scoped(
+            body,
+            codes_scr=pltpu.VMEM((2, block_rows, n_codes), jnp.int32),
+            fpay_scr=pltpu.VMEM((2, block_rows, n_fpay), jnp.float32),
+            code_sem=pltpu.SemaphoreType.DMA((2,)),
+            fpay_sem=pltpu.SemaphoreType.DMA((2,)),
+        )
+
+    return kernel
+
+
+def fused_scan_block_pallas(codes: jnp.ndarray, fpay: jnp.ndarray,
+                            specs: Tuple[ReduceSpec, ...], *,
+                            block_rows: int = 512, interpret: bool = False,
+                            double_buffer: bool = True):
+    """Run every reduction of ``specs`` over the same row blocks in ONE
+    kernel launch; returns a tuple of ``(n_segments_r, width_r)`` arrays
+    aligned with ``specs``.  ``codes`` (n, C) int32, ``fpay`` (n, W) f32."""
+    assert specs, "fused_scan_block needs at least one reduction"
+    assert codes.ndim == 2 and fpay.ndim == 2, (codes.shape, fpay.shape)
+    assert codes.shape[0] == fpay.shape[0], (codes.shape, fpay.shape)
+    codes = _pad_rows(codes.astype(jnp.int32), block_rows)
+    fpay = _pad_rows(fpay.astype(jnp.float32), block_rows)
+    n = codes.shape[0]
+    n_blocks = n // block_rows
+    out_shapes = tuple(jax.ShapeDtypeStruct((sp.n_segments, sp.width),
+                                            jnp.float32) for sp in specs)
+    if double_buffer:
+        return pl.pallas_call(
+            _dbuf_kernel(specs, block_rows, n_blocks),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                      pl.BlockSpec(memory_space=pltpu.ANY)],
+            out_specs=tuple(pl.BlockSpec(memory_space=pltpu.VMEM)
+                            for _ in out_shapes),
+            out_shape=out_shapes,
+            interpret=interpret,
+        )(codes, fpay)
+    return pl.pallas_call(
+        _grid_kernel(specs),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_rows, codes.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, fpay.shape[1]), lambda i: (i, 0)),
+        ],
+        out_specs=tuple(pl.BlockSpec(s.shape, lambda i: (0, 0))
+                        for s in out_shapes),
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM(s.shape, jnp.float32) for s in out_shapes],
+        interpret=interpret,
+    )(codes, fpay)

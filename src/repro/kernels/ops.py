@@ -16,10 +16,14 @@ import jax.numpy as jnp
 
 from repro.kernels.covar_xtx import covar_xtx_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fused_scan import ReduceSpec, fused_scan_block_pallas
 from repro.kernels.padding import pad_dim as _pad_dim
 from repro.kernels.padding import pad_rows as _pad_rows
 from repro.kernels.seg_aggregate import seg_aggregate_pallas
 from repro.kernels.tree_hist import tree_hist_batched_pallas, tree_hist_pallas
+
+__all__ = ["covar_xtx", "seg_aggregate", "tree_hist", "tree_hist_batched",
+           "fused_scan_block", "flash_attention", "ReduceSpec"]
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret", "feature_align"))
@@ -83,6 +87,23 @@ def tree_hist_batched(codes: jnp.ndarray, y: jnp.ndarray, cond: jnp.ndarray,
                                     y.astype(jnp.float32),
                                     cond.astype(jnp.float32), n_buckets,
                                     block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("specs", "block_rows",
+                                             "interpret", "double_buffer"))
+def fused_scan_block(codes: jnp.ndarray, fpay: jnp.ndarray,
+                     specs, *, block_rows: int = 512,
+                     interpret: bool = False, double_buffer: bool = True):
+    """Whole-step fused reduction: every bucket/hist reduction of a scan
+    step in ONE kernel launch over the shared row block (DESIGN.md §10).
+    ``specs`` is a (hashable) tuple of :class:`ReduceSpec`; returns a tuple
+    of ``(n_segments, width)`` arrays aligned with it.  Rows pad with zeroed
+    payload (validity is pre-folded into the payloads), so any ``n`` works;
+    ``double_buffer`` selects the manual two-slot HBM→VMEM DMA pipeline."""
+    return fused_scan_block_pallas(codes.astype(jnp.int32),
+                                   fpay.astype(jnp.float32), tuple(specs),
+                                   block_rows=block_rows, interpret=interpret,
+                                   double_buffer=double_buffer)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",

@@ -32,6 +32,23 @@ def tree_hist_batched_ref(codes: jnp.ndarray, y: jnp.ndarray,
                       for j in range(cond.shape[1])])
 
 
+def fused_scan_block_ref(codes: jnp.ndarray, fpay: jnp.ndarray, specs):
+    """Oracle for the whole-step fused kernel: each :class:`ReduceSpec` is
+    just a seg-sum of its payload slice (hist payloads formed as cond⊗yk)."""
+    outs = []
+    for sp in specs:
+        code = codes[:, sp.code_col]
+        if sp.kind == "seg":
+            pay = fpay[:, sp.pay_off:sp.pay_off + sp.width]
+        else:
+            cond = fpay[:, sp.pay_off:sp.pay_off + sp.n_cond]
+            yk = fpay[:, sp.yk_off:sp.yk_off + 3]
+            pay = (cond[:, :, None] * yk[:, None, :]).reshape(
+                codes.shape[0], sp.n_cond * 3)
+        outs.append(seg_aggregate_ref(code, pay, sp.n_segments))
+    return tuple(outs)
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                   causal: bool = True, window: int = 0) -> jnp.ndarray:
     """Dense reference attention with GQA, causal and sliding-window masks."""

@@ -1,0 +1,116 @@
+"""Compile-time blocking autotuner (core/autotune.py): cache hits do zero
+timing work, the on-disk cache survives process restarts, and corrupt or
+stale cache state degrades to defaults without ever raising mid-compile."""
+
+import json
+
+import pytest
+
+from repro.core import autotune as at
+from repro.core.autotune import (Autotuner, TuneSignature,
+                                 signature_for_step)
+
+
+def _sig(**kw):
+    base = dict(backend="pallas", platform="cpu", interpret=True,
+                n_rows=4096, n_segments=128, payload_width=16, n_nodes=None)
+    base.update(kw)
+    return signature_for_step(**base)
+
+
+@pytest.fixture
+def fast_tuner(monkeypatch):
+    """Autotuner factory whose candidate timing is instant but still counts
+    ``n_timed`` — tests assert on the counters, not wall time."""
+    def make(path):
+        t = Autotuner(str(path))
+
+        def fake_time_candidates(sig):
+            t.n_timed += len(at.BLOCK_SIZE_CANDIDATES)
+            t.n_timed += len(at.BLOCK_ROWS_CANDIDATES)
+            return 1024, 256
+        monkeypatch.setattr(t, "_time_candidates", fake_time_candidates)
+        return t
+    return make
+
+
+def test_signature_buckets_and_key():
+    a = _sig(n_rows=4000)
+    b = _sig(n_rows=4096)
+    assert a.key() == b.key()          # same pow2 bucket -> same cache line
+    assert _sig(n_rows=5000).key() != a.key()
+    assert _sig(n_nodes=8).key() != a.key()
+    assert a.key().startswith(f"v{at.CACHE_VERSION}/pallas/cpu/i1/")
+
+
+def test_cache_hit_does_zero_timing(fast_tuner, tmp_path):
+    path = tmp_path / "cache.json"
+    t = fast_tuner(path)
+    r1 = t.tune(_sig())
+    assert (r1.block_size, r1.block_rows) == (1024, 256)
+    assert not r1.from_cache and t.n_misses == 1 and t.n_timed > 0
+
+    timed_after_miss = t.n_timed
+    r2 = t.tune(_sig(n_rows=4000))     # same bucket -> hit, no timing
+    assert r2.from_cache and (r2.block_size, r2.block_rows) == (1024, 256)
+    assert t.n_hits == 1 and t.n_timed == timed_after_miss
+
+
+def test_cache_survives_restart(fast_tuner, tmp_path):
+    path = tmp_path / "cache.json"
+    fast_tuner(path).tune(_sig())
+
+    fresh = Autotuner(str(path))       # "new process": no monkeypatch needed
+    r = fresh.tune(_sig())
+    assert r.from_cache and (r.block_size, r.block_rows) == (1024, 256)
+    assert fresh.n_timed == 0 and fresh.n_hits == 1 and fresh.n_misses == 0
+
+
+def test_corrupt_cache_file_retunes_without_raising(fast_tuner, tmp_path):
+    path = tmp_path / "cache.json"
+    path.write_text("{not json!!")
+    t = fast_tuner(path)
+    r = t.tune(_sig())                 # load failure -> empty cache -> re-tune
+    assert not r.from_cache and t.n_misses == 1
+    # the re-tune rewrote a valid file
+    blob = json.loads(path.read_text())
+    assert blob["version"] == at.CACHE_VERSION and blob["entries"]
+
+
+def test_corrupt_entry_falls_back_to_defaults(fast_tuner, tmp_path):
+    path = tmp_path / "cache.json"
+    key = _sig().key()
+    path.write_text(json.dumps({
+        "version": at.CACHE_VERSION,
+        "entries": {key: {"block_size": "huge", "block_rows": 7}}}))
+    t = fast_tuner(path)
+    r = t.tune(_sig())                 # bad types / misaligned rows
+    assert r.fallback and not r.from_cache
+    assert (r.block_size, r.block_rows) == (at.DEFAULT_BLOCK_SIZE,
+                                            at.DEFAULT_BLOCK_ROWS)
+    assert t.n_fallbacks == 1 and t.n_timed == 0
+
+
+def test_stale_version_discarded(fast_tuner, tmp_path):
+    path = tmp_path / "cache.json"
+    key = _sig().key()
+    path.write_text(json.dumps({
+        "version": at.CACHE_VERSION + 1,
+        "entries": {key: {"block_size": 1024, "block_rows": 256}}}))
+    t = fast_tuner(path)
+    r = t.tune(_sig())                 # version mismatch -> whole cache dropped
+    assert not r.from_cache and t.n_misses == 1
+
+
+def test_real_timing_probe_smoke(tmp_path):
+    """One un-mocked tune on a tiny signature: the probes must run (capped at
+    MAX_PROBE_ROWS) and return a valid aligned blocking."""
+    t = Autotuner(str(tmp_path / "cache.json"))
+    r = t.tune(_sig(n_rows=512, n_segments=16, payload_width=4))
+    assert isinstance(r.block_size, int) and r.block_size > 0
+    assert r.block_rows % 8 == 0 and r.block_rows > 0
+    assert t.n_timed > 0
+
+    warm = Autotuner(str(tmp_path / "cache.json"))
+    r2 = warm.tune(_sig(n_rows=512, n_segments=16, payload_width=4))
+    assert r2.from_cache and warm.n_timed == 0

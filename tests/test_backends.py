@@ -116,3 +116,127 @@ def test_unknown_backend_rejected():
     from repro.core.lowering import get_backend
     with pytest.raises(ValueError):
         get_backend("cuda")
+
+
+# ---------------------------------------------------------------------------
+# launch-level kernel fusion (ISSUE 6): fused == unfused == xla, and the
+# static launch-site count actually reflects the fusion
+
+
+def _ridge_setup():
+    from repro.ml.covar import covar_queries
+    ds = D.make("retailer", scale=0.02)
+    qs, _ = covar_queries(ds)
+    return ds, qs
+
+
+@pytest.mark.parametrize("fuse_scans", [True, False])
+def test_fused_kernels_match_unfused_ridge(fuse_scans):
+    """Launch-level fusion (fuse_kernels) composes with scheduler-level
+    shared-scan fusion (fuse_scans): every combination agrees with xla.
+    Fused vs unfused pallas is allclose, not bitwise — the single fused dot
+    reassociates fp32 sums differently than per-view launches."""
+    ds, qs = _ridge_setup()
+    outs, stats = {}, {}
+    for be, fuse_kernels in [("xla", True), ("pallas", True),
+                             ("pallas", False)]:
+        eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
+        batch = eng.compile(qs, backend=be, fuse_scans=fuse_scans,
+                            fuse_kernels=fuse_kernels)
+        key = (be, fuse_kernels)
+        outs[key] = {k: np.asarray(v, np.float64)
+                     for k, v in batch(ds.db).items()}
+        stats[key] = batch.stats
+    for key in [("pallas", True), ("pallas", False)]:
+        for k in outs[("xla", True)]:
+            np.testing.assert_allclose(outs[key][k], outs[("xla", True)][k],
+                                       rtol=1e-4, atol=1e-4,
+                                       err_msg=f"{key}/{k}")
+    # xla has no pallas launch sites; fused pallas = 1 per scan step with
+    # views; unfused = one per bucket/hist view, strictly more here
+    assert stats[("xla", True)].n_kernel_launches == 0
+    n_fused = stats[("pallas", True)].n_kernel_launches
+    n_unfused = stats[("pallas", False)].n_kernel_launches
+    assert 0 < n_fused < n_unfused
+    assert n_fused <= stats[("pallas", True)].n_scan_steps
+
+
+def test_fused_kernels_match_unfused_tree_frontier():
+    """Frontier-batched node-histogram batch (the tree workload) under
+    launch fusion: batched hists ride the same fused launch."""
+    from repro.ml.trees import DecisionTree, stack_mask_params
+    import repro
+    ds = D.make("favorita", scale=0.02)
+    rng = np.random.default_rng(11)
+    outs, stats = {}, {}
+    for key, cfg in {
+            ("pallas", True): repro.ExecutionConfig(backend="pallas"),
+            ("pallas", False): repro.ExecutionConfig(backend="pallas",
+                                                     fuse_kernels=False),
+            ("xla", True): repro.ExecutionConfig(backend="xla")}.items():
+        dt = DecisionTree(ds, task="regression", max_depth=2,
+                          min_instances=10, max_nodes=7, node_batch=True,
+                          config=cfg)
+        masks = [{f.attr: np.ones(f.domain, np.float32)
+                  for f in dt.features} for _ in range(4)]
+        out = dt.batch.run_batched(ds.db, stack_mask_params(dt.features,
+                                                            masks))
+        outs[key] = {k: np.asarray(v, np.float64) for k, v in out.items()}
+        stats[key] = dt.batch.stats
+    for key in [("pallas", True), ("pallas", False)]:
+        for k in outs[("xla", True)]:
+            np.testing.assert_allclose(outs[key][k], outs[("xla", True)][k],
+                                       rtol=1e-4, atol=1e-4,
+                                       err_msg=f"{key}/{k}")
+    assert stats[("xla", True)].n_kernel_launches == 0
+    assert (0 < stats[("pallas", True)].n_kernel_launches
+            < stats[("pallas", False)].n_kernel_launches)
+
+
+def test_block_rows_threads_through_config():
+    """block_rows reaches the pallas lowering via PlanConfig (no more
+    backend class attribute) and any aligned value gives the same answer."""
+    ds, qs = _ridge_setup()
+    outs = []
+    for br in (128, 512):
+        eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
+        batch = eng.compile(qs, backend="pallas", block_rows=br)
+        assert batch.plan.config.block_rows == br
+        outs.append({k: np.asarray(v, np.float64)
+                     for k, v in batch(ds.db).items()})
+    for k in outs[0]:
+        np.testing.assert_allclose(outs[0][k], outs[1][k],
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bad", [0, -8, 7, 129, "biggish"])
+def test_invalid_block_rows_rejected(bad):
+    import repro
+    with pytest.raises(ValueError, match="multiple of 8|block_rows"):
+        repro.ExecutionConfig(backend="pallas", block_rows=bad)
+
+
+@pytest.mark.parametrize("bad", [0, -1, "large"])
+def test_invalid_block_size_rejected(bad):
+    import repro
+    with pytest.raises(ValueError, match="block_size"):
+        repro.ExecutionConfig(block_size=bad)
+
+
+def test_autotuned_blocking_smoke(tmp_path):
+    """block_size="auto" resolves per-step blockings at bind time, records
+    them in plan.last_autotune, and matches the xla reference."""
+    ds, qs = _ridge_setup()
+    cache = str(tmp_path / "autotune.json")
+    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
+    batch = eng.compile(qs, backend="pallas", block_size="auto",
+                        block_rows="auto", autotune_cache=cache)
+    out = {k: np.asarray(v, np.float64) for k, v in batch(ds.db).items()}
+    rep = batch.plan.last_autotune
+    assert rep and all(isinstance(r["block_size"], int)
+                       and r["block_rows"] % 8 == 0 for r in rep)
+    eng2 = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
+    ref_out = eng2.compile(qs, backend="xla")(ds.db)
+    for k in out:
+        np.testing.assert_allclose(out[k], np.asarray(ref_out[k], np.float64),
+                                   rtol=1e-4, atol=1e-4)

@@ -93,6 +93,81 @@ def test_kernels_pad_unaligned_rows(n):
                                rtol=1e-4, atol=1e-4)
 
 
+def _fused_case(n, n_cond=1, extra_hist=False, seed=0):
+    """Two seg buckets + hist(s) over one shared row block — the whole-step
+    union the launch-level fusion path builds (DESIGN.md §10)."""
+    rng = np.random.default_rng(n + n_cond + seed)
+    S1, W1, S2, W2, D = 13, 5, 7, 3, 6
+    c1 = rng.integers(0, S1, n).astype(np.int32)
+    c2 = rng.integers(0, S2, n).astype(np.int32)
+    ch = rng.integers(0, D, n).astype(np.int32)
+    p1 = rng.normal(size=(n, W1)).astype(np.float32)
+    p2 = rng.normal(size=(n, W2)).astype(np.float32)
+    cond = (rng.random((n, n_cond)) < 0.5).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    yk = np.stack([np.ones(n, np.float32), y, y * y], axis=1)
+    off = W1 + W2
+    pay_cols = [p1, p2, cond]
+    codes_cols = [c1, c2, ch]
+    specs = [ops.ReduceSpec("seg", 0, S1, W1, 0),
+             ops.ReduceSpec("seg", 1, S2, W2, W1),
+             ops.ReduceSpec("hist", 2, D, 3 * n_cond, off, n_cond=n_cond,
+                            yk_off=off + n_cond)]
+    off += n_cond
+    if extra_hist:
+        # second hist on a different code column but SHARING the yk triple
+        # (the lowering dedups yk per distinct y attribute)
+        D2 = 9
+        codes_cols.append(rng.integers(0, D2, n).astype(np.int32))
+        c2nd = (rng.random((n, n_cond)) < 0.5).astype(np.float32)
+        pay_cols.append(c2nd)
+        specs.append(ops.ReduceSpec("hist", 3, D2, 3 * n_cond, off,
+                                    n_cond=n_cond, yk_off=off + n_cond))
+        off += n_cond
+    pay_cols.append(yk)
+    codes = jnp.asarray(np.stack(codes_cols, axis=1))
+    fpay = jnp.asarray(np.concatenate(pay_cols, axis=1))
+    return codes, fpay, tuple(specs)
+
+
+@pytest.mark.parametrize("n", [64, 100, 517, 2048])
+@pytest.mark.parametrize("double_buffer", [True, False])
+def test_fused_scan_block_multi_spec(n, double_buffer):
+    codes, fpay, specs = _fused_case(n)
+    got = ops.fused_scan_block(codes, fpay, specs, block_rows=128,
+                               interpret=True, double_buffer=double_buffer)
+    want = ref.fused_scan_block_ref(codes, fpay, specs)
+    for sp, g, w in zip(specs, got, want):
+        assert g.shape == (sp.n_segments, sp.width)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-4, err_msg=str(sp))
+
+
+@pytest.mark.parametrize("n,n_cond", [(257, 4), (1000, 8)])
+def test_fused_scan_block_batched_cond(n, n_cond):
+    """Frontier-batched hists (n_cond = node-axis width) inside the fused
+    launch, plus a second hist sharing the same yk columns."""
+    codes, fpay, specs = _fused_case(n, n_cond=n_cond, extra_hist=True)
+    got = ops.fused_scan_block(codes, fpay, specs, block_rows=256,
+                               interpret=True)
+    want = ref.fused_scan_block_ref(codes, fpay, specs)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_fused_scan_block_dbuf_matches_grid_bitwise():
+    """The two-slot DMA pipeline is a pure data-movement change: it must be
+    bit-identical to the grid-pipelined path, not merely close."""
+    codes, fpay, specs = _fused_case(517, n_cond=2, extra_hist=True)
+    a = ops.fused_scan_block(codes, fpay, specs, block_rows=128,
+                             interpret=True, double_buffer=True)
+    b = ops.fused_scan_block(codes, fpay, specs, block_rows=128,
+                             interpret=True, double_buffer=False)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
 @pytest.mark.parametrize("b,h,hkv,s,d", [(1, 2, 1, 64, 8), (2, 4, 2, 100, 16),
                                          (1, 4, 4, 96, 32)])
 @pytest.mark.parametrize("causal,window", [(True, 0), (True, 24), (False, 0)])

@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""CI perf gate: diff a fresh BENCH_kernels.json against the committed
+baseline and fail on regression beyond tolerance (ROADMAP item 5).
+
+Two classes of metric, gated differently:
+
+* **machine-portable ratios** (the real trajectory claims) gate tight:
+  each end-to-end ``speedup_fused_auto`` (autotuned+fused pallas vs
+  static-block unfused) must stay within ``--ratio-tol`` of baseline AND
+  above the ``--min-speedup`` hard floor; ``allclose_xla`` must hold; the
+  static kernel-launch-site counts must not grow (launch fusion is a
+  compile-time property — any increase is a code regression, not noise).
+
+* **wall times** gate loose (``--time-tol``, default 1.5 → a kernel may be
+  up to 2.5x slower than baseline before failing): CI runners vary, and the
+  generous multiple only catches catastrophic regressions (an interpret-mode
+  fallback on TPU, a lost jit cache, an accidentally quadratic path).
+
+Refresh the baseline intentionally with ``tools/update_perf_baseline.py``
+after a change that legitimately moves the numbers.
+
+    python tools/perf_gate.py BENCH_kernels.json benchmarks/baselines/BENCH_kernels.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(current: dict, baseline: dict, *, time_tol: float,
+          ratio_tol: float, min_speedup: float):
+    """Yields (name, baseline_value, current_value, limit, ok) rows."""
+    for name, base in sorted(baseline.get("kernels", {}).items()):
+        cur = current.get("kernels", {}).get(name)
+        if cur is None:
+            yield (f"kernels/{name}/t_s", base["t_s"], None, "present", False)
+            continue
+        limit = base["t_s"] * (1.0 + time_tol)
+        yield (f"kernels/{name}/t_s", base["t_s"], cur["t_s"],
+               f"<= {limit:.3g}", cur["t_s"] <= limit)
+
+    for name, base in sorted(baseline.get("e2e", {}).items()):
+        cur = current.get("e2e", {}).get(name)
+        if cur is None:
+            yield (f"e2e/{name}", base.get("speedup_fused_auto"), None,
+                   "present", False)
+            continue
+        floor = max(base["speedup_fused_auto"] * (1.0 - ratio_tol),
+                    min_speedup)
+        sp = cur["speedup_fused_auto"]
+        yield (f"e2e/{name}/speedup_fused_auto", base["speedup_fused_auto"],
+               sp, f">= {floor:.3g}", sp >= floor)
+        yield (f"e2e/{name}/allclose_xla", base["allclose_xla"],
+               cur["allclose_xla"], "== True", bool(cur["allclose_xla"]))
+        yield (f"e2e/{name}/n_launches_fused", base["n_launches_fused"],
+               cur["n_launches_fused"],
+               f"<= {base['n_launches_fused']}",
+               cur["n_launches_fused"] <= base["n_launches_fused"])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh BENCH_kernels.json")
+    ap.add_argument("baseline",
+                    default="benchmarks/baselines/BENCH_kernels.json",
+                    nargs="?", help="committed baseline")
+    ap.add_argument("--time-tol", type=float, default=1.5,
+                    help="allowed relative wall-time growth (1.5 -> 2.5x)")
+    ap.add_argument("--ratio-tol", type=float, default=0.4,
+                    help="allowed relative drop of speedup ratios")
+    ap.add_argument("--min-speedup", type=float, default=0.9,
+                    help="hard floor for fused-vs-static speedups")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failed = 0
+    print(f"{'metric':<44} {'baseline':>12} {'current':>12} "
+          f"{'limit':>12}  status")
+    for name, base, cur, limit, ok in check(
+            current, baseline, time_tol=args.time_tol,
+            ratio_tol=args.ratio_tol, min_speedup=args.min_speedup):
+        failed += not ok
+
+        def fmt(v):
+            if isinstance(v, bool):
+                return str(v)
+            if v is None:
+                return "missing"
+            return f"{v:.4g}"
+
+        print(f"{name:<44} {fmt(base):>12} {fmt(cur):>12} {limit:>12}  "
+              f"{'ok' if ok else 'FAIL'}")
+    if failed:
+        print(f"\nperf gate: {failed} metric(s) regressed beyond tolerance "
+              "(refresh intentionally via tools/update_perf_baseline.py)")
+        return 1
+    print("\nperf gate: all metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Ratchet the committed kernel-roofline baseline (the perf gate's anchor).
+
+Copies a fresh ``BENCH_kernels.json`` (by default the one in the working
+directory, or regenerates it first with ``--run``) over
+``benchmarks/baselines/BENCH_kernels.json`` after validating its shape.
+Commit the result deliberately — the diff IS the perf-trajectory claim the
+CI gate (``tools/perf_gate.py``) enforces from then on.
+
+    BENCH_SCALE=0.01 PYTHONPATH=src python tools/update_perf_baseline.py --run
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_DST = os.path.join(REPO, "benchmarks", "baselines",
+                           "BENCH_kernels.json")
+
+
+def validate(payload: dict) -> None:
+    for key in ("peaks", "kernels", "e2e"):
+        if key not in payload:
+            raise SystemExit(f"refusing to ratchet: payload missing {key!r}")
+    for name, e in payload["e2e"].items():
+        if "speedup_fused_auto" not in e:
+            raise SystemExit(f"refusing to ratchet: e2e/{name} missing "
+                             "speedup_fused_auto")
+        if not e.get("allclose_xla"):
+            raise SystemExit(f"refusing to ratchet: e2e/{name} is not "
+                             "allclose to the xla backend — fix correctness "
+                             "before moving the perf anchor")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--src", default="BENCH_kernels.json",
+                    help="fresh payload to promote")
+    ap.add_argument("--dst", default=DEFAULT_DST)
+    ap.add_argument("--run", action="store_true",
+                    help="regenerate --src via benchmarks.bench_kernels "
+                    "before promoting")
+    args = ap.parse_args(argv)
+
+    if args.run:
+        env = dict(os.environ)
+        env.setdefault("PYTHONPATH", os.path.join(REPO, "src"))
+        env["BENCH_KERNELS_JSON"] = args.src
+        code = ("import json, os\n"
+                "from benchmarks import bench_kernels\n"
+                "bench_kernels.main()\n"
+                "with open(os.environ['BENCH_KERNELS_JSON'], 'w') as f:\n"
+                "    json.dump(bench_kernels.JSON_PAYLOAD, f, indent=1, "
+                "sort_keys=True)\n")
+        subprocess.run([sys.executable, "-c", code], check=True, env=env,
+                       cwd=REPO)
+
+    with open(args.src) as f:
+        payload = json.load(f)
+    validate(payload)
+    os.makedirs(os.path.dirname(args.dst), exist_ok=True)
+    with open(args.dst, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"baseline ratcheted: {args.src} -> {args.dst}")
+    for name, e in payload["e2e"].items():
+        print(f"  e2e/{name}: speedup_fused_auto="
+              f"{e['speedup_fused_auto']:.3f} "
+              f"launches={e['n_launches_fused']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
