@@ -14,10 +14,23 @@ every tick.  Results land in ``JSON_PAYLOAD`` (retrace counts included),
 which ``benchmarks/run.py`` serializes to ``BENCH_ivm.json`` so CI records
 the perf trajectory.
 
+Sharded rows (DESIGN.md §6): the same ridge workload over 2- and 4-device
+host meshes — steady-state tick under ``jax.transfer_guard("disallow")``
+plus sharded serving read latency.  Device count is fixed at jax import
+time, so each mesh size runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``; the contract
+fields (retraces, allclose vs a local recompute) ride along so the perf
+gate can hold them hard while wall times gate loose.
+
     PYTHONPATH=src python -m benchmarks.bench_ivm
 """
 
 from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
 
 import numpy as np
 
@@ -27,6 +40,8 @@ from repro.data import relations as relmod
 from repro.data.relations import DeltaBatchUpdate
 from repro.ml.cubes import StreamingCube, cube_name
 from repro.ml.online import OnlineRidge
+
+SHARDED_DEVICE_COUNTS = (2, 4)
 
 #: machine-readable results of the last ``main()`` run (benchmarks/run.py
 #: writes this out as BENCH_ivm.json)
@@ -42,6 +57,71 @@ def _fact_update(ds, rng, frac: float) -> DeltaBatchUpdate:
     ins = {a: np.asarray(c)[pick] for a, c in fact.items()}
     return (DeltaBatchUpdate().insert(ds.fact, ins)
             .delete(ds.fact, rng.choice(n, k, replace=False)))
+
+
+def sharded_main(ndev: int) -> dict:
+    """Sharded-IVM measurement body.  Runs in a subprocess whose XLA host
+    platform was forced to ``ndev`` devices (``_run_sharded``); measures the
+    steady-state sharded tick under ``transfer_guard("disallow")`` — the
+    zero-host-transfer contract — and the sharded serving read latency."""
+    import jax
+
+    from repro.api import ExecutionConfig
+
+    if len(jax.devices()) < ndev:
+        raise RuntimeError(f"need {ndev} devices, have {len(jax.devices())}")
+    mesh = jax.make_mesh((ndev,), ("data",))
+    ds = D.make("favorita", scale=BENCH_SCALE)
+    rng = np.random.default_rng(11)
+    # shard the fact explicitly: at small BENCH_SCALE the dense
+    # date×store Transactions table out-sizes Sales, and the default
+    # largest-relation pick would leave the updated fact replicated
+    olr = OnlineRidge(ds, config=ExecutionConfig(
+        block_size=4096, mesh=mesh, shard_rel=ds.fact))
+    olr.fit()
+    mb = olr.maintained
+    upd = _fact_update(ds, rng, 0.01)        # fixed sizes -> one pad bucket
+
+    timeit(lambda: mb.apply(upd))            # warm pad buckets and capacity
+    traces0 = mb.n_fold_traces + relmod.advance_trace_count()
+    with jax.transfer_guard("disallow"):     # steady-state contract
+        t_tick = timeit(lambda: mb.apply(upd))
+    retraces = mb.n_fold_traces + relmod.advance_trace_count() - traces0
+
+    srv = olr.view.serve()
+    t_read = timeit(lambda: srv.read())
+
+    # numeric agreement: the maintained sharded epoch vs a from-scratch
+    # single-device recompute over the gathered post-update relations
+    check = OnlineRidge(ds, config=ExecutionConfig(block_size=4096))
+    check.fit(db=mb.db)
+    a, b = mb.results(), check.maintained.results()
+    allclose = all(np.allclose(np.asarray(a[k]), np.asarray(b[k]),
+                               rtol=1e-3, atol=1e-3) for k in a)
+    topo = mb.shard_topology()
+    return {
+        "n_devices": ndev,
+        "tick_us_sharded": t_tick * 1e6,
+        "read_us_sharded": t_read * 1e6,
+        "steady_state_retraces": int(retraces),
+        "allclose_local": bool(allclose),
+        "rows_per_shard": int(topo["rows_per_shard"]),
+        "psums_per_tick_fact": int(topo["psums_per_tick"][ds.fact]),
+    }
+
+
+def _run_sharded(ndev: int) -> dict:
+    """Spawn ``sharded_main(ndev)`` with a forced ``ndev``-device host mesh
+    (device count is fixed at jax import time, hence the subprocess)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={ndev}").strip()
+    env["JAX_PLATFORMS"] = "cpu"             # host mesh: portable everywhere
+    env.setdefault("PYTHONPATH", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_ivm", "--sharded", str(ndev)],
+        check=True, env=env, capture_output=True, text=True)
+    return json.loads(out.stdout.splitlines()[-1])
 
 
 def main():
@@ -102,6 +182,20 @@ def main():
         "ivm/cube_delta_1pct", t_cube,
         f"cells={2 ** len(dims)};finest={cube_name(dims)}"))
 
+    # sharded IVM: steady-state tick + serving read over forced host meshes
+    sharded = {}
+    for ndev in SHARDED_DEVICE_COUNTS:
+        r = _run_sharded(ndev)
+        sharded[f"ndev{ndev}"] = r
+        lines.append(row(
+            f"ivm/sharded_tick_{ndev}dev", r["tick_us_sharded"] / 1e6,
+            f"devices={ndev};retraces={r['steady_state_retraces']};"
+            f"allclose={r['allclose_local']}"))
+        lines.append(row(
+            f"ivm/sharded_read_{ndev}dev", r["read_us_sharded"] / 1e6,
+            f"devices={ndev};rows_per_shard={r['rows_per_shard']};"
+            f"psums={r['psums_per_tick_fact']}"))
+
     JSON_PAYLOAD.clear()
     JSON_PAYLOAD.update({
         "dataset": "favorita", "scale": BENCH_SCALE,
@@ -116,9 +210,13 @@ def main():
         "delta_us": t_delta * 1e6,
         "speedup_delta_vs_full_x": t_full / t_delta,
         "cube_tick_us": t_cube * 1e6,
+        "sharded": sharded,
     })
     return lines
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    if len(sys.argv) > 1 and sys.argv[1] == "--sharded":
+        print(json.dumps(sharded_main(int(sys.argv[2])), sort_keys=True))
+    else:
+        print("\n".join(main()))

@@ -68,7 +68,10 @@ class ExecutionConfig:
     Placement: a non-None ``mesh`` makes every ``ViewHandle.run`` /
     ``run_batched`` domain-parallel over ``mesh_axis`` (``shard_rel``
     defaults to the largest relation, the paper's choice) — sharding is a
-    config choice, not a different method on a different class.
+    config choice, not a different method on a different class.  Maintained
+    views shard the same way: ``shard_rel`` lives row-partitioned on device
+    and every delta tick runs as one cached ``jit(shard_map)``
+    (DESIGN.md §6/§8), so serving and maintenance scale together.
 
     Frontier batching: ``pad_nodes_to_pow2`` rounds the param-batch (node)
     axis up to a power of two so a growing tree frontier hits at most log2
@@ -148,6 +151,10 @@ class ViewReport:
     # per-step blocking resolution from the last bind with "auto" blocking
     # (None when blocking is static or nothing has bound yet)
     autotune: Optional[list] = None
+    # shard topology for sharded runs (None when config.mesh is None):
+    # device count, mesh axis, partitioned relation, per-shard row/capacity
+    # geometry, and the psum count per tick (maintained) or per run (batch)
+    shard: Optional[Dict[str, object]] = None
 
     def summary(self) -> str:
         lines = [f"[{self.mode}] backend={self.backend}"
@@ -155,6 +162,19 @@ class ViewReport:
                  + (f" dispatches={self.n_dispatches}"
                     if self.n_dispatches is not None else ""),
                  "  " + self.batch.summary()]
+        if self.shard is not None:
+            t = self.shard
+            geom = (f" rows/shard={t['rows_per_shard']}"
+                    f" cap/shard={t['capacity_per_shard']}"
+                    if "rows_per_shard" in t else "")
+            if "psums_per_tick" in t:
+                psums = " psums/tick={%s}" % ", ".join(
+                    f"{r}: {n}" for r, n in t["psums_per_tick"].items())
+            else:
+                psums = f" psums/run={t['psums_per_run']}"
+            lines.append(f"  shard: devices={t['n_devices']} "
+                         f"axis={t['mesh_axis']} rel={t['shard_rel']}"
+                         + geom + psums)
         if self.epoch is not None:
             lines.append(
                 f"  ivm: epoch={self.epoch} step={self.step} "
@@ -400,9 +420,32 @@ class ViewHandle:
             rep.n_pinned_epochs = mb.n_pinned_epochs
             rep.n_evicted_pins = mb.n_evicted_pins
             rep.max_pinned_epochs = mb.max_pinned_epochs
+            rep.autotune = (self.compiled.plan.last_autotune_delta
+                            or self.compiled.plan.last_autotune)
+            rep.shard = mb.shard_topology()
             if self._server is not None:
                 rep.serving = self._server.stats()
+        elif cfg.mesh is not None:
+            rep.shard = self._shard_topology_batch()
         return rep
+
+    def _shard_topology_batch(self) -> Dict[str, object]:
+        """Shard facts for a batch-mode mesh run: the relation the next
+        ``run()`` would partition, its per-shard geometry, and how many
+        psums one sharded pass issues (one per view of every step scanning
+        the partitioned relation — distributed.py's combine rule)."""
+        cfg = self.config
+        sizes = self._database.sizes()
+        shard_rel = cfg.shard_rel or max(sorted(sizes), key=lambda k: sizes[k])
+        ndev = int(cfg.mesh.shape[cfg.mesh_axis])
+        n = sizes.get(shard_rel, 0)
+        return {"n_devices": ndev, "mesh_axis": cfg.mesh_axis,
+                "shard_rel": shard_rel, "rows": n,
+                "rows_per_shard": -(-n // ndev) if n else 0,
+                "capacity_per_shard": -(-max(n, 1) // ndev),
+                "psums_per_run": sum(
+                    len(step.vids) for step in self.compiled.schedule.steps
+                    if step.rel == shard_rel)}
 
 
 class Database:
@@ -464,13 +507,10 @@ class Database:
         delta-only)."""
         cfg = self.config
         if maintain:
-            if cfg.mesh is not None:
-                raise ValueError(
-                    "maintained views do not run sharded yet (sharded IVM "
-                    "is an open ROADMAP item); connect without a mesh")
             mb = self._engine._compile_incremental(
                 queries, root_override=roots, warm_rels=warm_rels,
-                **cfg.compile_kwargs())
+                mesh=cfg.mesh, mesh_axis=cfg.mesh_axis,
+                shard_rel=cfg.shard_rel, **cfg.compile_kwargs())
             return ViewHandle(self, mb.batch, maintained=mb)
         batch = self._engine._compile(queries, root_override=roots,
                                       **cfg.compile_kwargs())

@@ -46,6 +46,10 @@ def save(ckpt_dir: str, step: int, state: Any, keep: int = 3) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
     manifest: Dict[str, Any] = {"step": step, "leaves": {}}
+    # one explicit batched device→host gather for the whole tree (numpy
+    # leaves pass through untouched); sharded/replicated leaves land as
+    # plain host arrays, keeping the store mesh-agnostic
+    state = jax.device_get(state)
     for name, leaf in _leaf_paths(state):
         a = np.asarray(leaf)
         fn = name.replace("/", "__") + ".npy"

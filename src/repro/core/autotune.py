@@ -40,7 +40,7 @@ BLOCK_SIZE_CANDIDATES = (1024, 4096, 16384)
 BLOCK_ROWS_CANDIDATES = (128, 256, 512, 1024)
 #: timing probes cap the row axis: above this the per-row cost is flat
 MAX_PROBE_ROWS = 16384
-CACHE_VERSION = 1
+CACHE_VERSION = 2   # v2: delta-scan signatures (|update|-bucketed IVM shapes)
 
 
 def default_cache_path() -> str:
@@ -70,11 +70,12 @@ class TuneSignature:
     n_segments: int     # pow2 bucket of the widest segment layout in the step
     payload_width: int  # pow2 bucket of the step's total payload columns
     n_nodes: int        # param-batch (node) axis size (1 when unbatched)
+    delta: bool = False  # IVM delta scan: n_rows is the |update| pad bucket
 
     def key(self) -> str:
         return (f"v{CACHE_VERSION}/{self.backend}/{self.platform}/"
                 f"i{int(self.interpret)}/r{self.n_rows}/s{self.n_segments}/"
-                f"w{self.payload_width}/n{self.n_nodes}")
+                f"w{self.payload_width}/n{self.n_nodes}/d{int(self.delta)}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,12 +88,15 @@ class TuneResult:
 
 def signature_for_step(backend: str, platform: str, interpret: bool,
                        n_rows: int, n_segments: int, payload_width: int,
-                       n_nodes: Optional[int]) -> TuneSignature:
+                       n_nodes: Optional[int], delta: bool = False) -> TuneSignature:
+    """``delta=True`` marks an IVM delta scan: ``n_rows`` is then the
+    |update| pad bucket, tiny relative to full-relation scans, and the
+    optimal blocking differs enough to deserve its own cache lane."""
     return TuneSignature(
         backend=backend, platform=platform, interpret=bool(interpret),
         n_rows=_pow2_bucket(n_rows), n_segments=_pow2_bucket(n_segments),
         payload_width=_pow2_bucket(payload_width),
-        n_nodes=_pow2_bucket(n_nodes or 1))
+        n_nodes=_pow2_bucket(n_nodes or 1), delta=bool(delta))
 
 
 def _valid_entry(e) -> bool:

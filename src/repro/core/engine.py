@@ -320,12 +320,19 @@ class Engine:
                              double_buffer: bool = True,
                              autotune_cache: Optional[str] = None,
                              root_override: Optional[Dict[str, str]] = None,
-                             warm_rels: Sequence[str] = ()):
+                             warm_rels: Sequence[str] = (),
+                             mesh=None, mesh_axis: str = "data",
+                             shard_rel: Optional[str] = None):
         """Compile a query batch for incremental view maintenance: returns a
         :class:`~repro.core.ivm.MaintainedBatch` whose ``init(db)``
         materializes every view as persistent state and whose ``apply``
         folds a :class:`~repro.data.relations.DeltaBatchUpdate` into that
         state via per-relation delta programs (DESIGN.md §8).
+
+        With a ``mesh`` the maintained state shards: ``shard_rel`` (default
+        the largest relation at init) partitions row-wise over ``mesh_axis``
+        and every relation tick runs as one cached ``jit(shard_map)``
+        (DESIGN.md §6/§8).
 
         Delta programs are derived lazily on first update of each relation
         and cached; ``warm_rels`` pre-builds the programs for relations you
@@ -358,7 +365,8 @@ class Engine:
                               double_buffer=double_buffer,
                               autotune_cache=autotune_cache,
                               root_override=root_override)
-        mb = MaintainedBatch(batch)
+        mb = MaintainedBatch(batch, mesh=mesh, mesh_axis=mesh_axis,
+                             shard_rel=shard_rel)
         for rel in warm_rels:
             mb.delta_program(rel)
         return mb

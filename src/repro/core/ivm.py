@@ -59,11 +59,21 @@ from repro.core.pushdown import AggColSpec, ViewDef
 from repro.core.schedule import build_schedule
 from repro.core.schema import DatabaseSchema
 from repro.data.relations import (Database, DeltaBatchUpdate, Relation,
-                                  ResidentRelation, _resident_advance,
-                                  check_delete_idx, check_update_columns,
-                                  next_pow2)
+                                  ResidentRelation, ShardedResidentRelation,
+                                  _resident_advance, check_delete_idx,
+                                  check_update_columns, next_pow2)
 
 _pow2 = next_pow2
+
+
+def _replicate_resident(rr: ResidentRelation, mesh) -> ResidentRelation:
+    """Pin a resident relation replicated across a mesh (explicit placement,
+    so GSPMD never guesses and the transfer-guard contract stays clean)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    sh = NamedSharding(mesh, PartitionSpec())
+    return ResidentRelation(
+        rr.name, {a: jax.device_put(c, sh) for a, c in rr.buffers.items()},
+        rr.n_valid, jax.device_put(rr.n_valid_dev, sh))
 
 
 # ----------------------------------------------------------- delta derivation
@@ -253,15 +263,32 @@ class MaintainedBatch:
     buffers grow by doubling, so a stream of varying batch sizes against
     growing relations compiles at most log₂ distinct executables per
     relation and a steady-state tick retraces nothing.
+
+    With a ``mesh`` the batch is **sharded** (DESIGN.md §6/§8): one relation
+    (``shard_rel``, default the largest) lives row-partitioned over
+    ``mesh_axis`` as a :class:`ShardedResidentRelation`, the rest replicate,
+    and each relation tick is a single cached ``jit(shard_map(...))`` —
+    delta tuples partition like their relation, every step's view tensors
+    psum right after the step that scans the sharded relation (before the
+    state fold, so replicated state stays replicated), and
+    compaction/append never leave their shard.  The zero-host-transfer /
+    log₂-retrace contract is unchanged.
     """
 
-    def __init__(self, batch):
+    def __init__(self, batch, mesh=None, mesh_axis: str = "data",
+                 shard_rel: Optional[str] = None):
         self.batch = batch
         self.plan = batch.plan
         if self.plan.batched_params:
             raise ValueError(
                 "incremental maintenance does not support param-batched "
                 f"plans (batched params: {sorted(self.plan.batched_params)})")
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        if mesh is not None and mesh_axis not in mesh.shape:
+            raise ValueError(f"mesh has no axis {mesh_axis!r} "
+                             f"(axes: {tuple(mesh.shape)})")
+        self.shard_rel = shard_rel    # resolved at first init/load_state
         self._current: Optional[EpochState] = None
         #: delta scan steps executed across all applied updates
         self.n_delta_scan_steps = 0
@@ -325,27 +352,78 @@ class MaintainedBatch:
         columns are lazy device slices of the resident buffers)."""
         return self._require().database(self.batch.schema)
 
+    def _resolve_shard_rel(self, sizes: Mapping[str, int]) -> str:
+        """Fix the partitioned relation (config override or the largest) the
+        first time state materializes; frozen afterwards so runner caches
+        and epochs agree."""
+        if self.shard_rel is None:
+            self.shard_rel = max(sorted(sizes), key=lambda r: sizes[r])
+        elif self.shard_rel not in sizes:
+            raise ValueError(f"shard_rel {self.shard_rel!r} is not a "
+                             f"relation (have: {sorted(sizes)})")
+        return self.shard_rel
+
+    def _make_resident(self, rel: Relation):
+        """Relation → device-resident form under the batch's placement."""
+        if self.mesh is None:
+            return ResidentRelation.from_relation(rel)
+        if rel.name == self.shard_rel:
+            return ShardedResidentRelation.from_relation(
+                rel, self.mesh, self.mesh_axis)
+        return _replicate_resident(ResidentRelation.from_relation(rel),
+                                   self.mesh)
+
     def init(self, db: Database, params=None) -> Dict[str, jnp.ndarray]:
         """Full recompute: move every base relation into capacity-padded
         device buffers and materialize every view array, then publish the
         first epoch.  Re-init on a live batch publishes a fresh epoch (the
         epoch clock keeps counting so pinned readers stay unambiguous)."""
-        rels = {name: ResidentRelation.from_relation(r)
+        if self.mesh is not None:
+            self._resolve_shard_rel(db.sizes())
+        rels = {name: self._make_resident(r)
                 for name, r in db.relations.items()}
         params = dict(params or {})
         caps = {name: rr.capacity for name, rr in rels.items()}
-        key = (tuple(sorted(caps.items())), tuple(sorted(params)))
-        if key not in self._init_runners:
-            run = self.plan.bind_arrays(caps)
-            self._init_runners[key] = jax.jit(
-                lambda c, p, nv: run(c, p, n_valid=nv))
+        runner = self._init_runner(caps, rels, params)
         cols = {name: dict(rr.buffers) for name, rr in rels.items()}
         n_valid = {name: rr.n_valid_dev for name, rr in rels.items()}
-        views = dict(self._init_runners[key](cols, params, n_valid))
+        views = dict(runner(cols, params, n_valid))
         prev = self._current
         self._current = EpochState(epoch=prev.epoch + 1 if prev else 0,
                                    step=0, views=views, relations=rels)
         return self.results()
+
+    def _init_runner(self, caps: Mapping[str, int], rels, params):
+        """Cached jitted full-scan runner.  Under a mesh it is a
+        ``shard_map``: the sharded relation scans its local rows against its
+        local ``n_valid``, every other scan sees replicated inputs, and the
+        sharded relation's view tensors psum right after their step (the
+        batch path's rule, distributed.py) so outputs land replicated."""
+        key = (tuple(sorted(caps.items())), tuple(sorted(params)),
+               self.mesh is None or ("mesh", self.mesh_axis, self.shard_rel))
+        if key in self._init_runners:
+            return self._init_runners[key]
+        run = self.plan.bind_arrays(caps)   # sharded rel: per-shard capacity
+        if self.mesh is None:
+            self._init_runners[key] = jax.jit(
+                lambda c, p, nv: run(c, p, n_valid=nv))
+            return self._init_runners[key]
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        mesh, axis, srel = self.mesh, self.mesh_axis, self.shard_rel
+        col_specs = {name: {a: (P(axis) if name == srel else P())
+                            for a in rels[name].buffers} for name in rels}
+        nv_specs = {name: (P(axis) if name == srel else P()) for name in rels}
+
+        def local(cols, p, nv):
+            nvv = {name: (v[0] if name == srel else v)
+                   for name, v in nv.items()}
+            return run(cols, p, n_valid=nvv, psum_axes={srel: axis})
+
+        self._init_runners[key] = jax.jit(shard_map(
+            local, mesh=mesh, in_specs=(col_specs, P(), nv_specs),
+            out_specs=P(), check_rep=False))
+        return self._init_runners[key]
 
     def epoch_state(self, epoch: Optional[int] = None) -> EpochState:
         """Resolve an epoch to its immutable state: the published epoch by
@@ -470,6 +548,10 @@ class MaintainedBatch:
             rr = rels[rel]
             n_ins = 0 if ins is None else int(next(iter(ins.values())).shape[0])
             n_del = 0 if del_idx is None else len(del_idx)
+            if self.mesh is not None:
+                n_scans += self._apply_rel_mesh(views, rels, rel, ins, del_idx,
+                                                n_ins, n_del, params)
+                continue
             ins_pad = _pow2(n_ins) if n_ins else 0
             del_pad = _pow2(n_del) if n_del else 0
             ins_dev = {a: jax.device_put(np.pad(c, (0, ins_pad - n_ins)))
@@ -524,10 +606,14 @@ class MaintainedBatch:
                tuple(sorted(base_caps.items())), tuple(sorted(params)))
         if key in self._runners:
             return self._runners[key]
-        # delta ticks run without a bind-time autotune pass ("auto" blocking
-        # degrades to the static defaults — delta scans are |update|-sized)
-        backend, cfg = self.plan.backend, self.plan.concrete_config()
+        # per-step blocking resolves at runner-build time (outside the jit)
+        # against |update|-bucketed delta signatures — "auto" no longer
+        # degrades to the static defaults on the tick path
+        backend = self.plan.backend
         n_delta = ins_pad + del_pad
+        step_cfgs = self.plan.resolve_delta_configs(
+            dp.steps, [n_delta if st.scans_delta else base_caps[st.rel]
+                       for st in dp.steps])
 
         def run(state, rel_bufs, rel_n, base_cols, base_n, ins, del_idx,
                 n_ins, n_del, p):
@@ -552,7 +638,7 @@ class MaintainedBatch:
             # writes: a step's finalize overwrites its vid, so a later
             # gather of an affected child reads its *delta*
             arrays = dict(state)
-            for st in dp.steps:
+            for st, cfg in zip(dp.steps, step_cfgs):
                 if st.scans_delta:
                     backend.run_step(st.prog, delta_cols, arrays, p,
                                      n_valid=n_delta, offset=0, config=cfg,
@@ -569,6 +655,228 @@ class MaintainedBatch:
 
         self._runners[key] = jax.jit(run)
         return self._runners[key]
+
+    # -- sharded delta path (DESIGN.md §6/§8) --------------------------------
+
+    def _apply_rel_mesh(self, views, rels, rel, ins, del_idx, n_ins, n_del,
+                        params) -> int:
+        """One relation's tick under a mesh: stage the update (explicit
+        device_put — partitioned inserts / replicated deletes for the
+        sharded relation, replicated both for the rest), then run the cached
+        ``jit(shard_map)`` tick runner.  Returns the delta scan count."""
+        from repro.core import distributed as dist
+        mesh, axis, srel = self.mesh, self.mesh_axis, self.shard_rel
+        ndev = int(mesh.shape[axis])
+        rr = rels[rel]
+        sharded = rel == srel
+        if sharded:
+            # inserts go round-robin to shards; deletes travel replicated as
+            # *sorted global oracle positions* and route on device by gid
+            blk = _pow2(-(-n_ins // ndev)) if n_ins else 0
+            ins_pad = blk * ndev
+            del_pad = _pow2(n_del) if n_del else 0
+            if n_ins:
+                perm = dist.strided_insert_layout(blk, ndev)
+                ins_dev = {a: dist.put_sharded(
+                    np.pad(c, (0, ins_pad - n_ins))[perm], mesh, axis)
+                    for a, c in ins.items()}
+            else:
+                ins_dev = {}
+            del_dev = dist.put_replicated(
+                np.pad(np.sort(del_idx).astype(np.int32),
+                       (0, del_pad - n_del),
+                       constant_values=dist.GID_SENTINEL)
+                if n_del else np.zeros((0,), np.int32), mesh)
+            # growth check against the per-shard upper bound; sync the exact
+            # (ndev,) counters — metadata, not columns — only on overflow
+            shares = np.maximum(
+                (n_ins - np.arange(ndev) + ndev - 1) // ndev, 0)
+            if _pow2(max(int((rr.n_valid_ub + shares).max()), 1)) > rr.capacity:
+                rr = rr.synced()
+                rr = rr.grown(int((rr.n_valid_ub + shares).max()))
+        else:
+            ins_pad = _pow2(n_ins) if n_ins else 0
+            del_pad = _pow2(n_del) if n_del else 0
+            ins_dev = {a: dist.put_replicated(
+                np.pad(c, (0, ins_pad - n_ins)), mesh)
+                for a, c in (ins or {}).items()}
+            del_dev = dist.put_replicated(
+                np.pad(del_idx.astype(np.int32), (0, del_pad - n_del),
+                       constant_values=rr.capacity)
+                if n_del else np.zeros((0,), np.int32), mesh)
+            rr = rr.grown(rr.n_valid - n_del + n_ins)
+        rels[rel] = rr
+        dp = self.delta_program(rel)
+        runner = self._tick_runner_mesh(dp, rr.capacity, ins_pad, del_pad,
+                                        rels, params)
+
+        def scal(v):
+            return dist.put_replicated(np.asarray(v, np.int32), mesh)
+
+        state_in = {vid: views[vid] for vid in dp.state_vids}
+        base_cols = {r: dict(rels[r].buffers) for r in dp.base_rels}
+        base_n = {r: rels[r].n_valid_dev for r in dp.base_rels}
+        if sharded:
+            new_views, bufs, gids, nv_dev = runner(
+                state_in, dict(rr.buffers), rr.gids, rr.n_valid_dev,
+                base_cols, base_n, ins_dev, del_dev, scal(n_ins),
+                scal(n_del), scal(rr.n_valid - n_del), params)
+            rels[rel] = dataclasses.replace(
+                rr, buffers=bufs, gids=gids,
+                n_valid=rr.n_valid - n_del + n_ins,
+                n_valid_ub=rr.n_valid_ub + shares, n_valid_dev=nv_dev)
+        else:
+            new_views, bufs, nv_dev = runner(
+                state_in, dict(rr.buffers), rr.n_valid_dev, base_cols,
+                base_n, ins_dev, del_dev, scal(n_ins), scal(n_del), params)
+            rels[rel] = ResidentRelation(rel, bufs,
+                                         rr.n_valid - n_del + n_ins, nv_dev)
+        views.update(new_views)
+        return dp.n_scans
+
+    def _tick_runner_mesh(self, dp: DeltaProgram, cap: int, ins_pad: int,
+                          del_pad: int, rels, params):
+        """The sharded counterpart of :meth:`_tick_runner`: one cached
+        ``jit(shard_map)`` per (relation, pad buckets, capacities) running
+        delta-tuple assembly, the delta scans, the psum-before-fold combine,
+        and the shard-local buffer advance in a single dispatch.
+
+        Partitioned view deltas psum immediately after any step that scans
+        the sharded relation — a tier-1 delta scan of partitioned delta
+        tuples, or a tier-2 rescan of the partitioned base rows — so every
+        later gather and the final ``state + delta`` fold read replicated
+        values and the published epoch stays replicated (the soundness
+        argument of DESIGN.md §8)."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.core import distributed as dist
+        mesh, axis, srel = self.mesh, self.mesh_axis, self.shard_rel
+        ndev = int(mesh.shape[axis])
+        sharded = dp.rel == srel
+        base_caps = {r: rels[r].capacity for r in dp.base_rels}
+        key = ("mesh", dp.rel, cap, ins_pad, del_pad,
+               tuple(sorted(base_caps.items())), tuple(sorted(params)))
+        if key in self._runners:
+            return self._runners[key]
+        backend = self.plan.backend
+        blk = ins_pad // ndev if sharded else ins_pad
+        n_delta = blk + del_pad
+        step_cfgs = self.plan.resolve_delta_configs(
+            dp.steps, [n_delta if st.scans_delta else base_caps[st.rel]
+                       for st in dp.steps])
+        base_col_specs = {r: {a: (P(axis) if r == srel else P())
+                              for a in rels[r].buffers} for r in dp.base_rels}
+        base_n_specs = {r: (P(axis) if r == srel else P())
+                        for r in dp.base_rels}
+
+        def scan_steps(state, delta_cols, weights, base_cols, base_n, p):
+            arrays = dict(state)
+            for st, cfg in zip(dp.steps, step_cfgs):
+                if st.scans_delta:
+                    backend.run_step(st.prog, delta_cols, arrays, p,
+                                     n_valid=n_delta, offset=0, config=cfg,
+                                     weights=weights)
+                else:
+                    bn = base_n[st.rel]
+                    backend.run_step(st.prog, base_cols[st.rel], arrays, p,
+                                     n_valid=bn[0] if st.rel == srel else bn,
+                                     offset=0, config=cfg)
+                if st.rel == srel:
+                    # psum-before-fold: this step scanned partitioned rows
+                    for vp in st.prog.views:
+                        arrays[vp.vid] = jax.lax.psum(arrays[vp.vid], axis)
+            return {vid: state[vid] + arrays[vid] for vid in dp.affected}
+
+        def delta_block(rel_bufs, ins, slots, n_ins_loc, n_del_loc, b):
+            delta_cols = {}
+            for a, buf in rel_bufs.items():
+                segs = []
+                if b:
+                    segs.append(ins[a].astype(buf.dtype))
+                if del_pad:
+                    segs.append(jnp.take(buf, slots, mode="fill",
+                                         fill_value=0))
+                delta_cols[a] = (jnp.concatenate(segs) if len(segs) > 1
+                                 else segs[0])
+            w = []
+            if b:
+                w.append((jnp.arange(b) < n_ins_loc).astype(jnp.float32))
+            if del_pad:
+                w.append(-(jnp.arange(del_pad) < n_del_loc).astype(jnp.float32))
+            return delta_cols, (jnp.concatenate(w) if len(w) > 1 else w[0])
+
+        if sharded:
+            def run(state, rel_bufs, gid, rel_n, base_cols, base_n, ins,
+                    dels, n_ins, n_del, gid_base, p):
+                self.n_fold_traces += 1   # python side effect: traces only
+                shard = jax.lax.axis_index(axis).astype(jnp.int32)
+                nv = rel_n[0]
+                live = jnp.arange(cap, dtype=jnp.int32) < nv
+                if del_pad:
+                    hit, slots, n_del_loc = dist.local_delete(
+                        gid, live, dels, del_pad, cap)
+                else:
+                    hit = jnp.zeros((cap,), bool)
+                    slots, n_del_loc = None, jnp.int32(0)
+                n_ins_loc = (dist.local_insert_count(n_ins, shard, ndev, blk)
+                             if blk else jnp.int32(0))
+                delta_cols, weights = delta_block(rel_bufs, ins, slots,
+                                                  n_ins_loc, n_del_loc, blk)
+                new_views = scan_steps(state, delta_cols, weights,
+                                       base_cols, base_n, p)
+                new_bufs, new_gid, new_nv = dist.local_advance(
+                    rel_bufs, gid, nv, hit, dels, ins, gid_base, shard,
+                    ndev, blk, n_ins_loc, n_del_loc, compact=bool(del_pad))
+                return new_views, new_bufs, new_gid, new_nv[None]
+
+            in_specs = (P(), P(axis), P(axis), P(axis), base_col_specs,
+                        base_n_specs, P(axis), P(), P(), P(), P(), P())
+            out_specs = (P(), P(axis), P(axis), P(axis))
+        else:
+            def run(state, rel_bufs, rel_n, base_cols, base_n, ins, dels,
+                    n_ins, n_del, p):
+                self.n_fold_traces += 1   # python side effect: traces only
+                delta_cols, weights = delta_block(rel_bufs, ins, dels,
+                                                  n_ins, n_del, ins_pad)
+                new_views = scan_steps(state, delta_cols, weights,
+                                       base_cols, base_n, p)
+                new_bufs, new_nv = _resident_advance(
+                    rel_bufs, rel_n, ins, dels, n_ins, n_del,
+                    compact=bool(del_pad))
+                return new_views, new_bufs, new_nv
+
+            in_specs = (P(), P(), P(), base_col_specs, base_n_specs,
+                        P(), P(), P(), P(), P())
+            out_specs = (P(), P(), P())
+
+        self._runners[key] = jax.jit(shard_map(
+            run, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False))
+        return self._runners[key]
+
+    # -- explain/serve introspection -----------------------------------------
+
+    def shard_topology(self) -> Optional[Dict[str, object]]:
+        """Shard facts for ``explain()``/server stats: device count, the
+        partitioned relation and its per-shard geometry, and the psum count
+        one tick of each relation issues.  ``None`` when unsharded."""
+        if self.mesh is None:
+            return None
+        ndev = int(self.mesh.shape[self.mesh_axis])
+        top: Dict[str, object] = {
+            "n_devices": ndev, "mesh_axis": self.mesh_axis,
+            "shard_rel": self.shard_rel}
+        es = self._current
+        if es is not None and self.shard_rel in es.relations:
+            rr = es.relations[self.shard_rel]
+            top["rows"] = rr.n_valid
+            top["rows_per_shard"] = -(-rr.n_valid // ndev)
+            top["capacity_per_shard"] = rr.capacity
+        top["psums_per_tick"] = {
+            rel: sum(len(st.prog.views) for st in dp.steps
+                     if st.rel == self.shard_rel)
+            for rel, dp in sorted(self._delta_programs.items())}
+        return top
 
     # -- snapshots (checkpoint/store.py hooks) -------------------------------
 
@@ -588,19 +896,34 @@ class MaintainedBatch:
         tear it, and passing a pinned ``epoch`` checkpoints that exact
         version."""
         es = self.epoch_state(epoch)
+        # one explicit device→host gather for the view tensors; sharded
+        # relations likewise gather once inside to_relation()
+        views_host = jax.device_get({f"v{vid:04d}": a
+                                     for vid, a in sorted(es.views.items())})
         return {"epoch": np.asarray(es.epoch, np.int64),
                 "step": np.asarray(es.step, np.int64),
-                "views": {f"v{vid:04d}": np.asarray(a)
-                          for vid, a in sorted(es.views.items())},
+                "views": {k: np.asarray(v) for k, v in views_host.items()},
                 "relations": {name: {a: np.asarray(c) for a, c in
                                      rr.to_relation().columns.items()}
                               for name, rr in es.relations.items()}}
 
     def load_state(self, tree) -> None:
+        """Rebuild an epoch from a host snapshot.  Snapshots are placement-
+        free (oracle-ordered trimmed relations), so a checkpoint written by
+        a single-device batch restores into a sharded one and vice versa —
+        relations re-residentify under *this* batch's mesh config."""
         views = {int(k[1:]): jnp.asarray(v)
                  for k, v in tree["views"].items()}
-        rels = {name: ResidentRelation.from_relation(
-                    Relation(name, {a: jnp.asarray(c) for a, c in cols.items()}))
+        if self.mesh is not None:
+            self._resolve_shard_rel(
+                {name: int(np.asarray(next(iter(cols.values()))).shape[0])
+                 for name, cols in tree["relations"].items()})
+            from repro.core.distributed import put_replicated
+            views = {vid: put_replicated(v, self.mesh)
+                     for vid, v in views.items()}
+        conv = np.asarray if self.mesh is not None else jnp.asarray
+        rels = {name: self._make_resident(
+                    Relation(name, {a: conv(c) for a, c in cols.items()}))
                 for name, cols in tree["relations"].items()}
         self._current = EpochState(epoch=int(np.asarray(tree["epoch"])),
                                    step=int(np.asarray(tree["step"])),

@@ -103,6 +103,8 @@ class ExecutablePlan:
         #: per-step record of the last blocking resolution (``bind`` fills
         #: it when the config carries "auto"); surfaced by ``explain()``
         self.last_autotune: Optional[List[Dict[str, object]]] = None
+        #: same, for the IVM delta tick (``resolve_delta_configs``)
+        self.last_autotune_delta: Optional[List[Dict[str, object]]] = None
 
     # ------------------------------------------------------------- autotune
 
@@ -116,8 +118,10 @@ class ExecutablePlan:
 
     def concrete_config(self) -> PlanConfig:
         """The config with any ``"auto"`` blocking replaced by the static
-        defaults — for paths that execute without a bind-time resolution
-        (the IVM delta tick, whose scans are |delta|-sized anyway)."""
+        defaults — the last-resort fallback for paths that execute without a
+        bind-time resolution.  The IVM delta tick no longer uses this: it
+        resolves per-step via :meth:`resolve_delta_configs` against
+        |update|-bucketed signatures."""
         from repro.core import autotune as at
 
         cfg = self.config
@@ -144,25 +148,12 @@ class ExecutablePlan:
         from repro.core import autotune as at
 
         platform = jax.default_backend()
-        interpret = (bool(cfg.interpret) if cfg.interpret is not None
-                     else platform != "tpu") if cfg.backend == "pallas" else False
+        interpret = self._interpret_flag(platform)
         out, report = [], []
         for step, prog in zip(steps, self.step_programs):
-            n_seg, width = 1, 0
-            for vp in prog.views:
-                lead = (n_nodes or 1) if vp.batched else 1
-                if vp.hist is not None:
-                    n_seg = max(n_seg, vp.hist.n_buckets)
-                    width += 3 * lead
-                else:
-                    if vp.seg is not None:
-                        n_seg = max(n_seg, vp.seg.n_segments)
-                    w = vp.n_aggs * lead
-                    for d in vp.pulled_dims:
-                        w *= d
-                    width += w
+            n_seg, width = self._prog_tune_dims(prog, n_nodes)
             sig = at.signature_for_step(cfg.backend, platform, interpret,
-                                        n_rows[step.rel], n_seg, max(width, 1),
+                                        n_rows[step.rel], n_seg, width,
                                         n_nodes)
             res = self.autotuner.tune(sig)
             bs = res.block_size if cfg.block_size == "auto" else cfg.block_size
@@ -173,6 +164,65 @@ class ExecutablePlan:
                            "from_cache": res.from_cache,
                            "fallback": res.fallback})
         self.last_autotune = report
+        return out
+
+    def _interpret_flag(self, platform: str) -> bool:
+        cfg = self.config
+        if cfg.backend != "pallas":
+            return False
+        return (bool(cfg.interpret) if cfg.interpret is not None
+                else platform != "tpu")
+
+    def _prog_tune_dims(self, prog: StepProgram, n_nodes: Optional[int]):
+        """(widest segment layout, total payload width) of one fused step —
+        the shape facts a tuning signature carries besides the row count."""
+        n_seg, width = 1, 0
+        for vp in prog.views:
+            lead = (n_nodes or 1) if vp.batched else 1
+            if vp.hist is not None:
+                n_seg = max(n_seg, vp.hist.n_buckets)
+                width += 3 * lead
+            else:
+                if vp.seg is not None:
+                    n_seg = max(n_seg, vp.seg.n_segments)
+                w = vp.n_aggs * lead
+                for d in vp.pulled_dims:
+                    w *= d
+                width += w
+        return n_seg, max(width, 1)
+
+    def resolve_delta_configs(self, steps, n_rows: Sequence[int],
+                              n_nodes: Optional[int] = None) -> List[PlanConfig]:
+        """One concrete :class:`PlanConfig` per IVM delta step (objects with
+        ``.prog`` / ``.rel`` / ``.scans_delta``, see ``core/ivm.py``).
+        ``n_rows[i]`` is step i's static scan length: the |update| pad bucket
+        for delta scans, the rescanned relation's (per-shard) capacity
+        otherwise.  Delta scans tune under ``delta=True`` signatures — their
+        own cache lane — so ``block_size="auto"`` no longer degrades to the
+        static defaults on the tick path.  Runs at tick-runner *build* time,
+        outside any jit trace, so timing probes are legal."""
+        cfg = self.config
+        if cfg.block_size != "auto" and cfg.block_rows != "auto":
+            return [cfg] * len(steps)
+        from repro.core import autotune as at
+
+        platform = jax.default_backend()
+        interpret = self._interpret_flag(platform)
+        out, report = [], []
+        for st, rows in zip(steps, n_rows):
+            n_seg, width = self._prog_tune_dims(st.prog, n_nodes)
+            sig = at.signature_for_step(cfg.backend, platform, interpret,
+                                        max(int(rows), 1), n_seg, width,
+                                        n_nodes, delta=st.scans_delta)
+            res = self.autotuner.tune(sig)
+            bs = res.block_size if cfg.block_size == "auto" else cfg.block_size
+            br = res.block_rows if cfg.block_rows == "auto" else cfg.block_rows
+            out.append(dataclasses.replace(cfg, block_size=bs, block_rows=br))
+            report.append({"rel": st.rel, "delta": st.scans_delta,
+                           "key": sig.key(), "block_size": bs,
+                           "block_rows": br, "from_cache": res.from_cache,
+                           "fallback": res.fallback})
+        self.last_autotune_delta = report
         return out
 
     def n_kernel_launches(self) -> int:
@@ -235,11 +285,13 @@ class ExecutablePlan:
         step_configs = self.resolve_step_configs(n_rows, n_nodes)
 
         def run(columns: Columns, params: Params,
-                n_valid: Optional[Mapping[str, jnp.ndarray]] = None):
+                n_valid: Optional[Mapping[str, jnp.ndarray]] = None,
+                psum_axes: Optional[Mapping[str, str]] = None):
             nv = dict(n_rows)
             if n_valid:
                 nv.update(n_valid)
             return self._run_steps(columns, params, nv, n_nodes,
+                                   psum_axes=psum_axes,
                                    step_configs=step_configs)
 
         return run

@@ -334,6 +334,118 @@ class ResidentRelation:
                                 self.n_valid - n_del + n_ins, n_valid_dev)
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardedResidentRelation:
+    """A resident relation partitioned row-wise over one mesh axis: every
+    column is a ``(n_devices * capacity,)`` buffer sharded ``P(axis)``, so
+    each device owns a ``capacity``-row (power-of-two, uniform) shard with
+    its *own* valid prefix — ``n_valid_dev`` is a per-shard ``(n_devices,)``
+    counter vector sharded the same way.  Compaction and append stay local
+    to a shard (DESIGN.md §8): there is no global row order on device.
+
+    The oracle's row order survives through ``gids``: an int32 buffer
+    holding, per live row, its position in the equivalent single-device
+    :class:`Relation` (deletes renumber survivors on device, appends take
+    fresh trailing positions round-robin across shards).  Positional delete
+    batches route to their owning shard by matching ``gids`` — no host-side
+    placement map, so a steady-state tick stays free of host transfers.
+
+    Host mirrors: ``n_valid`` is the *exact* total row count (pure host
+    arithmetic, like the single-device mirror); ``n_valid_ub`` is a
+    per-shard **upper bound** (inserts are counted, local deletes are not —
+    their shard is data-dependent).  Capacity growth checks run against the
+    bound and call :meth:`synced` (one explicit ``device_get`` of the
+    ``(n_devices,)`` counters — metadata, never relation columns) only when
+    the bound would overflow, so steady-state ticks never sync."""
+
+    name: str
+    buffers: Dict[str, jnp.ndarray]     # (ndev * cap,) each, P(axis)
+    gids: jnp.ndarray                   # (ndev * cap,) int32, P(axis)
+    n_valid: int                        # exact total live rows (host)
+    n_valid_ub: np.ndarray              # (ndev,) per-shard upper bound (host)
+    n_valid_dev: jnp.ndarray            # (ndev,) int32, P(axis)
+    mesh: object                        # jax.sharding.Mesh
+    axis: str
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    @property
+    def capacity(self) -> int:
+        """Per-shard capacity (uniform across shards)."""
+        return int(next(iter(self.buffers.values())).shape[0]) // self.n_devices
+
+    def _sharding(self):
+        from jax.sharding import NamedSharding, PartitionSpec
+        return NamedSharding(self.mesh, PartitionSpec(self.axis))
+
+    @classmethod
+    def from_relation(cls, rel: Relation, mesh, axis: str,
+                      min_capacity: int = 1) -> "ShardedResidentRelation":
+        """Contiguous row split: shard ``s`` takes global rows
+        ``[s*rps, (s+1)*rps)`` (``rps = ceil(n/ndev)``) with gids equal to
+        the global row indices — any split works, gids carry the order."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        ndev = int(mesh.shape[axis])
+        sh = NamedSharding(mesh, PartitionSpec(axis))
+        n = rel.n_rows
+        rps = -(-n // ndev) if n else 0
+        cap = next_pow2(max(rps, min_capacity, 1))
+
+        def lay(col):
+            col = np.asarray(col)
+            out = np.zeros((ndev * cap,), col.dtype)
+            for s in range(ndev):
+                lo, hi = s * rps, min((s + 1) * rps, n)
+                if hi > lo:
+                    out[s * cap:s * cap + hi - lo] = col[lo:hi]
+            return jax.device_put(out, sh)
+
+        nv = np.asarray([max(0, min(n - s * rps, rps)) for s in range(ndev)],
+                        np.int64)
+        return cls(rel.name, {a: lay(c) for a, c in rel.columns.items()},
+                   lay(np.arange(n, dtype=np.int32)), n, nv,
+                   jax.device_put(nv.astype(np.int32), sh), mesh, axis)
+
+    def to_relation(self) -> Relation:
+        """Gather every shard's valid prefix to host **once** and restore
+        the oracle row order by sorting on gids.  Host numpy columns — this
+        is the checkpoint/oracle exit, never the tick path."""
+        ndev, cap = self.n_devices, self.capacity
+        bufs, gids, nv = jax.device_get((dict(self.buffers), self.gids,
+                                         self.n_valid_dev))
+        keep = np.zeros((ndev * cap,), bool)
+        for s in range(ndev):
+            keep[s * cap:s * cap + int(nv[s])] = True
+        order = np.argsort(np.asarray(gids)[keep], kind="stable")
+        return Relation(self.name, {a: np.asarray(c)[keep][order]
+                                    for a, c in bufs.items()})
+
+    def synced(self) -> "ShardedResidentRelation":
+        """Refresh the per-shard upper bound to the exact device counters
+        (one explicit transfer of ``(n_devices,)`` int32 — metadata only)."""
+        nv = np.asarray(jax.device_get(self.n_valid_dev), np.int64)
+        return dataclasses.replace(self, n_valid_ub=nv)
+
+    def grown(self, min_rows_per_shard: int) -> "ShardedResidentRelation":
+        """Uniform per-shard capacity >= ``min_rows_per_shard`` (pow2
+        doubling; every shard grows together so buffers stay uniform)."""
+        cap = next_pow2(max(min_rows_per_shard, 1))
+        old = self.capacity
+        if cap <= old:
+            return self
+        ndev, sh = self.n_devices, self._sharding()
+
+        def pad(buf):
+            x = jnp.pad(buf.reshape(ndev, old), ((0, 0), (0, cap - old)))
+            return jax.device_put(x.reshape(ndev * cap), sh)
+
+        return dataclasses.replace(
+            self, buffers={a: pad(c) for a, c in self.buffers.items()},
+            gids=pad(self.gids))
+
+
 # --------------------------------------------------------------------- deltas
 
 @dataclasses.dataclass

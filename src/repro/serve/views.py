@@ -21,6 +21,14 @@ serialized by the server's write lock (the maintained batch is
 single-writer by contract).  ``checkpoint()`` snapshots a pinned epoch
 through the crash-safe store, so a checkpoint taken mid-update-stream is a
 clean version, not a torn mix.
+
+The server is mesh-agnostic by construction: when the maintained batch is
+sharded (``ExecutionConfig.mesh``), epochs hold replicated view tensors —
+every tick psums partial deltas *before* the state fold — so the pin / swap
+/ read machinery above is byte-for-byte the same code, reads stay wait-free
+on every shard, and only ``apply`` (one ``jit(shard_map)`` per updated
+relation) and ``checkpoint`` (one host gather via the snapshot path) touch
+the mesh (DESIGN.md §8).  ``stats()["shard"]`` reports the topology.
 """
 
 from __future__ import annotations
@@ -138,7 +146,7 @@ class ViewServer:
         with self.maintained.pinned() as epoch:
             return self.maintained.save(ckpt_dir, keep=keep, epoch=epoch)
 
-    def stats(self) -> Dict[str, int]:
+    def stats(self) -> Dict[str, object]:
         return {"epoch": self.maintained.epoch,
                 "step": self.maintained.step,
                 "n_reads": self.n_reads,
@@ -147,4 +155,5 @@ class ViewServer:
                 "n_pinned_epochs": self.maintained.n_pinned_epochs,
                 "n_evicted_pins": self.maintained.n_evicted_pins,
                 "max_pinned_epochs": self.maintained.max_pinned_epochs,
-                "n_delta_scan_steps": self.maintained.n_delta_scan_steps}
+                "n_delta_scan_steps": self.maintained.n_delta_scan_steps,
+                "shard": self.maintained.shard_topology()}

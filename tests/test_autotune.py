@@ -43,6 +43,16 @@ def test_signature_buckets_and_key():
     assert a.key().startswith(f"v{at.CACHE_VERSION}/pallas/cpu/i1/")
 
 
+def test_delta_signature_gets_own_cache_lane():
+    """IVM delta ticks tune against |update|-sized shapes: the delta flag
+    splits the cache line, so a full-scan tuning at the same pow2 bucket
+    can never serve (or be polluted by) a delta-tick blocking."""
+    a = _sig(n_rows=4096)
+    d = _sig(n_rows=4096, delta=True)
+    assert d.key() != a.key()
+    assert d.key().endswith("/d1") and a.key().endswith("/d0")
+
+
 def test_cache_hit_does_zero_timing(fast_tuner, tmp_path):
     path = tmp_path / "cache.json"
     t = fast_tuner(path)

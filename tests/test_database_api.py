@@ -216,8 +216,18 @@ def test_viewhandle_mode_errors():
         live.run_batched({})
     import jax
     mesh = jax.make_mesh((1,), ("data",))
-    with pytest.raises(ValueError, match="sharded IVM"):
-        db.with_config(mesh=mesh).views(QUERIES, maintain=True)
+    # sharded maintained views compile and run (PR: sharded IVM); on a
+    # 1-device mesh the shard_map path must agree with the local batch
+    sharded = db.with_config(mesh=mesh).views(QUERIES, maintain=True)
+    out_sh, out_local = sharded.run(), live.run()
+    for q in QUERIES:
+        np.testing.assert_allclose(np.asarray(out_sh[q.name]),
+                                   np.asarray(out_local[q.name]),
+                                   rtol=1e-4, atol=1e-4, err_msg=q.name)
+    assert sharded.explain().shard["n_devices"] == 1
+    with pytest.raises(ValueError, match="shard_rel"):
+        db.with_config(mesh=mesh, shard_rel="nope").views(
+            QUERIES, maintain=True).run()
 
 
 def test_review_hardening(fav):

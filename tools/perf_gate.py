@@ -1,6 +1,16 @@
 #!/usr/bin/env python
-"""CI perf gate: diff a fresh BENCH_kernels.json against the committed
+"""CI perf gate: diff a fresh benchmark payload against its committed
 baseline and fail on regression beyond tolerance (ROADMAP item 5).
+
+Understands both payload schemas — the gated sections are whatever the
+baseline file carries:
+
+* ``BENCH_kernels.json``: kernel rooflines + fused/autotuned e2e speedups.
+* ``BENCH_ivm.json``: IVM tick/read latencies plus the sharded rows
+  (per-mesh steady-state tick and serving read).  Contract fields gate
+  hard — ``steady_state_retraces`` must stay 0 (a retrace in steady state
+  is a jit-cache bug, not noise) and the sharded epochs must stay allclose
+  to the single-device recompute; wall times gate loose.
 
 Two classes of metric, gated differently:
 
@@ -58,6 +68,37 @@ def check(current: dict, baseline: dict, *, time_tol: float,
                cur["n_launches_fused"],
                f"<= {base['n_launches_fused']}",
                cur["n_launches_fused"] <= base["n_launches_fused"])
+
+    # --- BENCH_ivm.json schema ---------------------------------------
+    if "steady_state_retraces" in baseline:
+        cur_r = current.get("steady_state_retraces")
+        yield ("ivm/steady_state_retraces", baseline["steady_state_retraces"],
+               cur_r, "== 0", cur_r == 0)
+        for t in ("tick_us_resident", "delta_us"):
+            if t not in baseline:
+                continue
+            cur_t = current.get(t)
+            limit = baseline[t] * (1.0 + time_tol)
+            yield (f"ivm/{t}", baseline[t], cur_t, f"<= {limit:.3g}",
+                   cur_t is not None and cur_t <= limit)
+
+    for name, base in sorted(baseline.get("sharded", {}).items()):
+        cur = current.get("sharded", {}).get(name)
+        if cur is None:
+            yield (f"sharded/{name}", base["tick_us_sharded"], None,
+                   "present", False)
+            continue
+        yield (f"sharded/{name}/steady_state_retraces",
+               base["steady_state_retraces"], cur.get("steady_state_retraces"),
+               "== 0", cur.get("steady_state_retraces") == 0)
+        yield (f"sharded/{name}/allclose_local", base["allclose_local"],
+               cur.get("allclose_local"), "== True",
+               bool(cur.get("allclose_local")))
+        for t in ("tick_us_sharded", "read_us_sharded"):
+            limit = base[t] * (1.0 + time_tol)
+            yield (f"sharded/{name}/{t}", base[t], cur.get(t),
+                   f"<= {limit:.3g}",
+                   cur.get(t) is not None and cur[t] <= limit)
 
 
 def main(argv=None) -> int:

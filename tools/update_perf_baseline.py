@@ -1,13 +1,16 @@
 #!/usr/bin/env python
-"""Ratchet the committed kernel-roofline baseline (the perf gate's anchor).
+"""Ratchet a committed perf baseline (the perf gate's anchor).
 
-Copies a fresh ``BENCH_kernels.json`` (by default the one in the working
-directory, or regenerates it first with ``--run``) over
-``benchmarks/baselines/BENCH_kernels.json`` after validating its shape.
-Commit the result deliberately — the diff IS the perf-trajectory claim the
-CI gate (``tools/perf_gate.py``) enforces from then on.
+Copies a fresh payload (by default the one in the working directory, or
+regenerates it first with ``--run``) over its committed baseline under
+``benchmarks/baselines/`` after validating its shape.  Default is the
+kernel-roofline baseline (``BENCH_kernels.json``); ``--ivm`` ratchets the
+IVM/sharded baseline (``BENCH_ivm.json``) instead.  Commit the result
+deliberately — the diff IS the perf-trajectory claim the CI gate
+(``tools/perf_gate.py``) enforces from then on.
 
     BENCH_SCALE=0.01 PYTHONPATH=src python tools/update_perf_baseline.py --run
+    BENCH_SCALE=0.01 PYTHONPATH=src python tools/update_perf_baseline.py --run --ivm
 """
 
 from __future__ import annotations
@@ -21,6 +24,8 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_DST = os.path.join(REPO, "benchmarks", "baselines",
                            "BENCH_kernels.json")
+DEFAULT_DST_IVM = os.path.join(REPO, "benchmarks", "baselines",
+                               "BENCH_ivm.json")
 
 
 def validate(payload: dict) -> None:
@@ -37,41 +42,69 @@ def validate(payload: dict) -> None:
                              "before moving the perf anchor")
 
 
+def validate_ivm(payload: dict) -> None:
+    if payload.get("steady_state_retraces") != 0:
+        raise SystemExit("refusing to ratchet: steady_state_retraces != 0 — "
+                         "the resident tick is retracing; fix the jit cache "
+                         "before moving the perf anchor")
+    if not payload.get("sharded"):
+        raise SystemExit("refusing to ratchet: payload missing sharded rows")
+    for name, e in payload["sharded"].items():
+        if e.get("steady_state_retraces") != 0:
+            raise SystemExit(f"refusing to ratchet: sharded/{name} retraces "
+                             "in steady state")
+        if not e.get("allclose_local"):
+            raise SystemExit(f"refusing to ratchet: sharded/{name} disagrees "
+                             "with the single-device recompute — fix "
+                             "correctness before moving the perf anchor")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--src", default="BENCH_kernels.json",
-                    help="fresh payload to promote")
-    ap.add_argument("--dst", default=DEFAULT_DST)
+    ap.add_argument("--src", default=None, help="fresh payload to promote")
+    ap.add_argument("--dst", default=None)
+    ap.add_argument("--ivm", action="store_true",
+                    help="ratchet the IVM/sharded baseline (BENCH_ivm.json) "
+                    "instead of the kernel roofline")
     ap.add_argument("--run", action="store_true",
-                    help="regenerate --src via benchmarks.bench_kernels "
-                    "before promoting")
+                    help="regenerate --src via the benchmark module before "
+                    "promoting")
     args = ap.parse_args(argv)
+    src = args.src or ("BENCH_ivm.json" if args.ivm else "BENCH_kernels.json")
+    dst = args.dst or (DEFAULT_DST_IVM if args.ivm else DEFAULT_DST)
 
     if args.run:
         env = dict(os.environ)
         env.setdefault("PYTHONPATH", os.path.join(REPO, "src"))
-        env["BENCH_KERNELS_JSON"] = args.src
+        mod = "bench_ivm" if args.ivm else "bench_kernels"
+        env["BENCH_JSON_OUT"] = src
         code = ("import json, os\n"
-                "from benchmarks import bench_kernels\n"
-                "bench_kernels.main()\n"
-                "with open(os.environ['BENCH_KERNELS_JSON'], 'w') as f:\n"
-                "    json.dump(bench_kernels.JSON_PAYLOAD, f, indent=1, "
+                f"from benchmarks import {mod}\n"
+                f"{mod}.main()\n"
+                "with open(os.environ['BENCH_JSON_OUT'], 'w') as f:\n"
+                f"    json.dump({mod}.JSON_PAYLOAD, f, indent=1, "
                 "sort_keys=True)\n")
         subprocess.run([sys.executable, "-c", code], check=True, env=env,
                        cwd=REPO)
 
-    with open(args.src) as f:
+    with open(src) as f:
         payload = json.load(f)
-    validate(payload)
-    os.makedirs(os.path.dirname(args.dst), exist_ok=True)
-    with open(args.dst, "w") as f:
+    (validate_ivm if args.ivm else validate)(payload)
+    os.makedirs(os.path.dirname(dst), exist_ok=True)
+    with open(dst, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
         f.write("\n")
-    print(f"baseline ratcheted: {args.src} -> {args.dst}")
-    for name, e in payload["e2e"].items():
-        print(f"  e2e/{name}: speedup_fused_auto="
-              f"{e['speedup_fused_auto']:.3f} "
-              f"launches={e['n_launches_fused']}")
+    print(f"baseline ratcheted: {src} -> {dst}")
+    if args.ivm:
+        for name, e in sorted(payload["sharded"].items()):
+            print(f"  sharded/{name}: tick={e['tick_us_sharded']:.0f}us "
+                  f"read={e['read_us_sharded']:.0f}us "
+                  f"retraces={e['steady_state_retraces']}")
+    else:
+        for name, e in payload["e2e"].items():
+            print(f"  e2e/{name}: speedup_fused_auto="
+                  f"{e['speedup_fused_auto']:.3f} "
+                  f"launches={e['n_launches_fused']}")
     return 0
 
 
