@@ -13,13 +13,16 @@ cheap and cycle-free.
 
 _API = ("connect", "Database", "ExecutionConfig", "ViewHandle", "ViewReport")
 
-__all__ = list(_API)
+__all__ = list(_API) + ["obs"]
 
 
 def __getattr__(name):
     if name in _API:
         from repro import api
         return getattr(api, name)
+    if name == "obs":
+        import importlib
+        return importlib.import_module("repro.obs")
     if name == "EngineDeprecationWarning":
         from repro.core.engine import EngineDeprecationWarning
         return EngineDeprecationWarning

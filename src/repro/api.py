@@ -31,6 +31,7 @@ they are thin shims over the same internals this facade drives.
 from __future__ import annotations
 
 import dataclasses
+import time as _time
 from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 from repro.core.aggregates import Params, Query
@@ -81,6 +82,13 @@ class ExecutionConfig:
     may keep device-resident; beyond it the least-recently-used pin is
     evicted (reads of an evicted epoch raise
     :class:`~repro.core.ivm.EpochEvictedError`).
+
+    Telemetry (DESIGN.md §11): ``warn_epoch_lag`` sets the pinned-reader lag
+    (served head minus oldest pin) past which the server logs a rate-limited
+    warning (None disables); ``workload_capacity`` bounds the session's
+    in-memory workload recorder (``Database.workload``) — every run/read
+    records its query signature, hit path, and latency there; 0 disables
+    recording.
     """
 
     backend: str = "xla"
@@ -97,6 +105,8 @@ class ExecutionConfig:
     shard_rel: Optional[str] = None
     pad_nodes_to_pow2: bool = True
     max_pinned_epochs: Optional[int] = None
+    warn_epoch_lag: Optional[int] = None
+    workload_capacity: int = 4096
 
     def __post_init__(self):
         from repro.core.plan import validate_blocking
@@ -107,6 +117,13 @@ class ExecutionConfig:
         validate_blocking(self.block_size, self.block_rows)
         if self.max_pinned_epochs is not None and self.max_pinned_epochs < 1:
             raise ValueError("max_pinned_epochs must be >= 1 (or None)")
+        if self.warn_epoch_lag is not None and self.warn_epoch_lag < 1:
+            raise ValueError("warn_epoch_lag must be >= 1 (or None)")
+        if (not isinstance(self.workload_capacity, int)
+                or isinstance(self.workload_capacity, bool)
+                or self.workload_capacity < 0):
+            raise ValueError("workload_capacity must be an int >= 0 "
+                             "(0 disables recording)")
         if self.mesh is not None and self.mesh_axis not in self.mesh.shape:
             raise ValueError(f"mesh has no axis {self.mesh_axis!r} "
                              f"(axes: {tuple(self.mesh.shape)})")
@@ -146,17 +163,38 @@ class ViewReport:
     n_pinned_epochs: Optional[int] = None
     n_evicted_pins: Optional[int] = None
     max_pinned_epochs: Optional[int] = None
-    # serving counters (None until serve())
-    serving: Optional[Dict[str, int]] = None
+    # full server stats dict (None until serve()) — counters plus the
+    # read/tick latency distributions and epoch lag (DESIGN.md §11)
+    serving: Optional[Dict[str, object]] = None
     # per-step blocking resolution from the last bind with "auto" blocking
-    # (None when blocking is static or nothing has bound yet)
+    # (None when blocking is static or nothing has bound yet); the delta
+    # variant is the IVM tick resolution — both render, labeled, when set
     autotune: Optional[list] = None
+    autotune_delta: Optional[list] = None
     # shard topology for sharded runs (None when config.mesh is None):
     # device count, mesh axis, partitioned relation, per-shard row/capacity
     # geometry, and the psum count per tick (maintained) or per run (batch)
     shard: Optional[Dict[str, object]] = None
 
+    @staticmethod
+    def _render_autotune(report: list) -> str:
+        return ", ".join(
+            f"{a['rel']}: bs={a['block_size']} br={a['block_rows']}"
+            + (" (cached)" if a["from_cache"] else "")
+            + (" (fallback)" if a.get("fallback") else "")
+            for a in report)
+
+    @staticmethod
+    def _render_latency(label: str, snap: Optional[Dict[str, float]]) -> str:
+        if not snap or not snap.get("count"):
+            return ""
+        return (f" {label}_p50={snap['p50']:.0f}us"
+                f" {label}_p99={snap['p99']:.0f}us")
+
     def summary(self) -> str:
+        """Every populated field renders — the line set is keyed on what the
+        report carries, not on the mode label, so batch / maintained / served
+        handles print consistently."""
         lines = [f"[{self.mode}] backend={self.backend}"
                  f"{' sharded' if self.sharded else ''}"
                  + (f" dispatches={self.n_dispatches}"
@@ -175,9 +213,11 @@ class ViewReport:
             lines.append(f"  shard: devices={t['n_devices']} "
                          f"axis={t['mesh_axis']} rel={t['shard_rel']}"
                          + geom + psums)
-        if self.epoch is not None:
+        if self.step is not None:
             lines.append(
-                f"  ivm: epoch={self.epoch} step={self.step} "
+                "  ivm: epoch="
+                + ("-" if self.epoch is None else str(self.epoch))
+                + f" step={self.step} "
                 f"delta_scans={self.n_delta_scan_steps} "
                 f"fold_traces={self.n_fold_traces} "
                 f"pinned={self.n_pinned_epochs}"
@@ -188,14 +228,16 @@ class ViewReport:
             s = self.serving
             lines.append(f"  serve: reads={s['n_reads']} "
                          f"updates={s['n_updates']} "
-                         f"rejected={s['n_rejected_updates']}")
+                         f"rejected={s['n_rejected_updates']} "
+                         f"lag={s.get('epoch_lag', 0)}"
+                         + self._render_latency("read", s.get("read_us"))
+                         + self._render_latency("tick", s.get("tick_us")))
         if self.autotune:
-            parts = ", ".join(
-                f"{a['rel']}: bs={a['block_size']} br={a['block_rows']}"
-                + (" (cached)" if a["from_cache"] else "")
-                + (" (fallback)" if a.get("fallback") else "")
-                for a in self.autotune)
-            lines.append(f"  autotune: {parts}")
+            lines.append("  autotune[batch]: "
+                         + self._render_autotune(self.autotune))
+        if self.autotune_delta:
+            lines.append("  autotune[delta]: "
+                         + self._render_autotune(self.autotune_delta))
         return "\n".join(lines)
 
 
@@ -223,6 +265,29 @@ class ViewHandle:
         self._maintained = maintained
         self._server = None
         self._sharded = {}              # cached (fn, cols) mesh runners
+        self._signatures = None         # lazy {name: QuerySignature}
+
+    # -- workload recording (DESIGN.md §11) ----------------------------------
+
+    def signatures(self) -> Dict[str, "object"]:
+        """Structural query signatures per view name (the workload
+        recorder's router key; see ``repro.obs.workload``)."""
+        if self._signatures is None:
+            from repro.obs.workload import signature_of
+
+            self._signatures = {
+                q: signature_of(qo.query)
+                for q, qo in self.compiled.result.outputs.items()}
+        return self._signatures
+
+    def _record(self, kind: str, hit: str, t0: float,
+                epoch: Optional[int] = None) -> None:
+        rec = self._database.workload
+        if not rec.enabled:
+            return
+        us = (_time.perf_counter() - t0) * 1e6
+        for name, sig in self.signatures().items():
+            rec.record(kind, name, sig, hit, us, epoch=epoch)
 
     # -- introspection -------------------------------------------------------
 
@@ -317,19 +382,28 @@ class ViewHandle:
         (domain-parallel over ``config.mesh`` when set).  Maintained views:
         the first call runs the full scan and publishes epoch 0; later calls
         read the current epoch (no rescans — use :meth:`apply` to advance)."""
+        t0 = _time.perf_counter()
         if self._maintained is not None:
             mb = self._maintained
             if not mb.initialized:
-                return mb.init(self._database.data, params=params)
+                out = mb.init(self._database.data, params=params)
+                self._record("run", "full_scan", t0, epoch=mb.epoch)
+                return out
             if params:
                 raise ValueError(
                     "maintained views bind params at the initial full scan; "
                     "re-init via handle.maintained.init(db, params=...) to "
                     "change them (a later run() only reads the epoch)")
-            return mb.results()
+            out = mb.results()
+            self._record("run", "epoch_read", t0, epoch=mb.epoch)
+            return out
         if self.config.mesh is not None:
-            return self._run_sharded(params)
-        return self.compiled(self._database.data, params)
+            out = self._run_sharded(params)
+            self._record("run", "sharded_scan", t0)
+            return out
+        out = self.compiled(self._database.data, params)
+        self._record("run", "batch_scan", t0)
+        return out
 
     def run_batched(self, params: Params, n_nodes: Optional[int] = None):
         """Evaluate N parameter settings in ONE fused dispatch (the node
@@ -341,11 +415,16 @@ class ViewHandle:
         if not self.compiled.plan.batched_params:
             raise ValueError("views were compiled without batched params; "
                              "declare Param(..., batched=True) terms first")
+        t0 = _time.perf_counter()
         if self.config.mesh is not None:
-            return self._run_sharded(params, n_nodes=n_nodes)
-        return self.compiled.run_batched(
+            out = self._run_sharded(params, n_nodes=n_nodes)
+            self._record("run_batched", "sharded_scan", t0)
+            return out
+        out = self.compiled.run_batched(
             self._database.data, params, n_nodes=n_nodes,
             pad_to_pow2=self.config.pad_nodes_to_pow2)
+        self._record("run_batched", "batch_scan", t0)
+        return out
 
     def lower(self, params: Optional[Params] = None,
               n_nodes: Optional[int] = None):
@@ -368,10 +447,13 @@ class ViewHandle:
         """Maintained-view outputs read from one epoch's frozen state."""
         return self.maintained.results(epoch=epoch)
 
-    def serve(self, max_pinned_epochs: Optional[int] = None):
+    def serve(self, max_pinned_epochs: Optional[int] = None,
+              warn_epoch_lag: Optional[int] = None):
         """An epoch-pinning :class:`~repro.serve.views.ViewServer` over the
         maintained state (started — epoch 0 is published if needed).  The
-        pin budget defaults to ``config.max_pinned_epochs``."""
+        pin budget defaults to ``config.max_pinned_epochs``, the lag-warning
+        threshold to ``config.warn_epoch_lag``; reads record into the
+        session's workload recorder (``Database.workload``)."""
         from repro.serve.views import ViewServer
 
         mb = self.maintained
@@ -379,8 +461,12 @@ class ViewHandle:
             max_pinned_epochs = self.config.max_pinned_epochs
         if max_pinned_epochs is not None and max_pinned_epochs < 1:
             raise ValueError("max_pinned_epochs must be >= 1 (or None)")
+        if warn_epoch_lag is None:
+            warn_epoch_lag = self.config.warn_epoch_lag
         if self._server is None:
-            self._server = ViewServer(mb, max_pinned_epochs=max_pinned_epochs)
+            self._server = ViewServer(mb, max_pinned_epochs=max_pinned_epochs,
+                                      warn_epoch_lag=warn_epoch_lag,
+                                      workload=self._database.workload)
         elif max_pinned_epochs is not None:
             mb.max_pinned_epochs = max_pinned_epochs
         if not mb.initialized:
@@ -420,8 +506,9 @@ class ViewHandle:
             rep.n_pinned_epochs = mb.n_pinned_epochs
             rep.n_evicted_pins = mb.n_evicted_pins
             rep.max_pinned_epochs = mb.max_pinned_epochs
-            rep.autotune = (self.compiled.plan.last_autotune_delta
-                            or self.compiled.plan.last_autotune)
+            # both resolutions, labeled — the delta lane no longer shadows
+            # the init full scan's
+            rep.autotune_delta = self.compiled.plan.last_autotune_delta
             rep.shard = mb.shard_topology()
             if self._server is not None:
                 rep.serving = self._server.stats()
@@ -458,6 +545,8 @@ class Database:
                  config: Optional[ExecutionConfig] = None,
                  fact: Optional[str] = None,
                  _engine: Optional[Engine] = None):
+        from repro.obs.workload import WorkloadRecorder
+
         self.schema = schema
         self.data = data                      #: resident relations
         self.config = config or ExecutionConfig()
@@ -465,6 +554,10 @@ class Database:
         self.edges = list(edges) if edges is not None else None
         self._engine = _engine or Engine(schema, edges=edges,
                                          sizes=data.sizes())
+        #: session-wide workload recorder (DESIGN.md §11): every view run
+        #: and served read lands here; ``workload.export_json(path)`` is
+        #: the future view advisor's input (ROADMAP item 2)
+        self.workload = WorkloadRecorder(self.config.workload_capacity)
 
     # -- data access ---------------------------------------------------------
 

@@ -33,6 +33,8 @@ import os
 import time
 from typing import Dict, Optional, Tuple
 
+from repro.obs.trace import span
+
 DEFAULT_BLOCK_SIZE = 4096
 DEFAULT_BLOCK_ROWS = 512
 #: candidate grids — block_rows stays MXU-sublane aligned (multiples of 8)
@@ -168,7 +170,8 @@ class Autotuner:
             return TuneResult(DEFAULT_BLOCK_SIZE, DEFAULT_BLOCK_ROWS,
                               from_cache=False, fallback=True)
         self.n_misses += 1
-        block_size, block_rows = self._time_candidates(sig)
+        with span("autotune.tune", key=key):
+            block_size, block_rows = self._time_candidates(sig)
         self._entries[key] = {"block_size": int(block_size),
                               "block_rows": int(block_rows),
                               "sig": dataclasses.asdict(sig)}
@@ -181,15 +184,20 @@ class Autotuner:
         return min(sig.n_rows, MAX_PROBE_ROWS)
 
     def _time(self, fn) -> float:
-        """Median-of-3 wall seconds after one warmup (compile) run."""
+        """Median-of-3 wall seconds after one warmup (compile) run.
+
+        The only telemetry site allowed to sync the device: probes run at
+        bind time, outside any trace and outside the steady-state contract
+        (their whole purpose is wall timing)."""
         import jax
-        jax.block_until_ready(fn())
-        self.n_timed += 1
-        times = []
-        for _ in range(3):
-            t0 = time.perf_counter()
+        with span("autotune.probe"):
             jax.block_until_ready(fn())
-            times.append(time.perf_counter() - t0)
+            self.n_timed += 1
+            times = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                times.append(time.perf_counter() - t0)
         times.sort()
         return times[1]
 

@@ -33,6 +33,7 @@ from repro.core.jointree import JoinTree
 from repro.core.plan import ExecutablePlan, PlanConfig
 from repro.core.pushdown import PushdownResult, push_down
 from repro.core.schema import DatabaseSchema
+from repro.obs.trace import span
 
 
 class EngineDeprecationWarning(DeprecationWarning):
@@ -272,20 +273,29 @@ class Engine:
         collapses each step's bucket/hist reductions into one fused launch
         per row block; ``double_buffer`` enables its manual HBM→VMEM DMA
         pipeline (DESIGN.md §10)."""
-        if root_override is not None:
-            roots = dict(root_override)
-        elif multi_root:
-            roots = roots_mod.find_roots(self.tree, queries, self.sizes)
-        else:
-            roots = roots_mod.single_root(self.tree, queries, self.sizes)
-        result = push_down(self.tree, queries, roots)
-        groups = group_views(result)
-        cfg = PlanConfig(block_size=block_size, backend=backend,
-                         interpret=interpret, fuse_scans=fuse_scans,
-                         block_rows=block_rows, fuse_kernels=fuse_kernels,
-                         double_buffer=double_buffer,
-                         autotune_cache=autotune_cache)
-        return CompiledBatch(self.schema, self.tree, result, groups, cfg, roots)
+        with span("compile", n_queries=len(queries), backend=backend):
+            with span("compile.roots"):
+                if root_override is not None:
+                    roots = dict(root_override)
+                elif multi_root:
+                    roots = roots_mod.find_roots(self.tree, queries,
+                                                 self.sizes)
+                else:
+                    roots = roots_mod.single_root(self.tree, queries,
+                                                  self.sizes)
+            with span("compile.pushdown"):
+                result = push_down(self.tree, queries, roots)
+            with span("compile.group"):
+                groups = group_views(result)
+            cfg = PlanConfig(block_size=block_size, backend=backend,
+                             interpret=interpret, fuse_scans=fuse_scans,
+                             block_rows=block_rows, fuse_kernels=fuse_kernels,
+                             double_buffer=double_buffer,
+                             autotune_cache=autotune_cache)
+            # CompiledBatch builds the ExecutablePlan, which emits the
+            # compile.ir / compile.schedule child spans
+            return CompiledBatch(self.schema, self.tree, result, groups, cfg,
+                                 roots)
 
     def compile_incremental(self, queries: Sequence[Query], *,
                             multi_root: bool = True, block_size=4096,

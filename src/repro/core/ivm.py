@@ -47,6 +47,7 @@ import collections
 import contextlib
 import dataclasses
 import threading
+import time
 from typing import Dict, FrozenSet, List, Mapping, Optional, Tuple
 
 import jax
@@ -54,6 +55,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.groups import ViewGroup
+from repro.obs.metrics import Registry
+from repro.obs.trace import span
 from repro.core.ir import StepProgram, build_programs, fuse_programs
 from repro.core.pushdown import AggColSpec, ViewDef
 from repro.core.schedule import build_schedule
@@ -315,6 +318,11 @@ class MaintainedBatch:
         self._evicted: "collections.OrderedDict[int, None]" = \
             collections.OrderedDict()
         self._evicted_floor = -1      # every evicted epoch <= this is trimmed
+        #: per-batch telemetry (DESIGN.md §11): ``ivm.tick_us`` is the host
+        #: dispatch wall of each ``apply`` — no sync, so async dispatch cost,
+        #: which is what the steady-state contract allows us to measure
+        self.metrics = Registry()
+        self._tick_hist = self.metrics.histogram("ivm.tick_us")
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -378,19 +386,20 @@ class MaintainedBatch:
         device buffers and materialize every view array, then publish the
         first epoch.  Re-init on a live batch publishes a fresh epoch (the
         epoch clock keeps counting so pinned readers stay unambiguous)."""
-        if self.mesh is not None:
-            self._resolve_shard_rel(db.sizes())
-        rels = {name: self._make_resident(r)
-                for name, r in db.relations.items()}
-        params = dict(params or {})
-        caps = {name: rr.capacity for name, rr in rels.items()}
-        runner = self._init_runner(caps, rels, params)
-        cols = {name: dict(rr.buffers) for name, rr in rels.items()}
-        n_valid = {name: rr.n_valid_dev for name, rr in rels.items()}
-        views = dict(runner(cols, params, n_valid))
-        prev = self._current
-        self._current = EpochState(epoch=prev.epoch + 1 if prev else 0,
-                                   step=0, views=views, relations=rels)
+        with span("ivm.init"):
+            if self.mesh is not None:
+                self._resolve_shard_rel(db.sizes())
+            rels = {name: self._make_resident(r)
+                    for name, r in db.relations.items()}
+            params = dict(params or {})
+            caps = {name: rr.capacity for name, rr in rels.items()}
+            runner = self._init_runner(caps, rels, params)
+            cols = {name: dict(rr.buffers) for name, rr in rels.items()}
+            n_valid = {name: rr.n_valid_dev for name, rr in rels.items()}
+            views = dict(runner(cols, params, n_valid))
+            prev = self._current
+            self._current = EpochState(epoch=prev.epoch + 1 if prev else 0,
+                                       step=0, views=views, relations=rels)
         return self.results()
 
     def _init_runner(self, caps: Mapping[str, int], rels, params):
@@ -500,6 +509,12 @@ class MaintainedBatch:
         with self._pin_lock:
             return len(self._pins)
 
+    def pinned_epochs(self) -> Tuple[int, ...]:
+        """Currently pinned epoch ids (ascending) — the server derives
+        epoch lag (head minus oldest pin) from this."""
+        with self._pin_lock:
+            return tuple(sorted(self._pins))
+
     # -- delta path ----------------------------------------------------------
 
     def delta_program(self, rel: str) -> DeltaProgram:
@@ -523,71 +538,87 @@ class MaintainedBatch:
         serialization (``serve.views.ViewServer`` provides it)."""
         cur = self._require()
         params = dict(params or {})
+        t_tick = time.perf_counter()
 
-        # phase 1 — validate the whole batch against the current epoch
-        # (host-side numpy on the update only; state untouched)
-        prepared = []
-        for rel in update.relations():
-            if rel not in cur.relations:
-                raise ValueError(f"update targets unknown relation {rel!r}")
-            rr = cur.relations[rel]
-            d = update.updates[rel]
-            ins = (check_update_columns(self.batch.schema, rel, d.inserts)
-                   if d.n_inserts else None)
-            del_idx = (check_delete_idx(rel, d.delete_idx, rr.n_valid)
-                       if d.n_deletes else None)
-            prepared.append((rel, ins, del_idx))
+        with span("ivm.apply", epoch=cur.epoch):
+            # phase 1 — validate the whole batch against the current epoch
+            # (host-side numpy on the update only; state untouched)
+            with span("ivm.validate"):
+                prepared = []
+                for rel in update.relations():
+                    if rel not in cur.relations:
+                        raise ValueError(
+                            f"update targets unknown relation {rel!r}")
+                    rr = cur.relations[rel]
+                    d = update.updates[rel]
+                    ins = (check_update_columns(self.batch.schema, rel,
+                                                d.inserts)
+                           if d.n_inserts else None)
+                    del_idx = (check_delete_idx(rel, d.delete_idx, rr.n_valid)
+                               if d.n_deletes else None)
+                    prepared.append((rel, ins, del_idx))
 
-        # phase 2 — functional fold: new arrays only, current epoch readable
-        # throughout; the update's columns cross to the device exactly once
-        # (explicit device_put), relation columns never cross back
-        views = dict(cur.views)
-        rels = dict(cur.relations)
-        n_scans = 0
-        for rel, ins, del_idx in prepared:
-            rr = rels[rel]
-            n_ins = 0 if ins is None else int(next(iter(ins.values())).shape[0])
-            n_del = 0 if del_idx is None else len(del_idx)
-            if self.mesh is not None:
-                n_scans += self._apply_rel_mesh(views, rels, rel, ins, del_idx,
-                                                n_ins, n_del, params)
-                continue
-            ins_pad = _pow2(n_ins) if n_ins else 0
-            del_pad = _pow2(n_del) if n_del else 0
-            ins_dev = {a: jax.device_put(np.pad(c, (0, ins_pad - n_ins)))
-                       for a, c in (ins or {}).items()}
-            # delete pads point past the valid region: harmless for the
-            # compaction scatter, zero-filled by the delta gather
-            del_dev = jax.device_put(
-                np.pad(del_idx.astype(np.int32), (0, del_pad - n_del),
-                       constant_values=rr.capacity)
-                if n_del else np.zeros((0,), np.int32))
-            rr = rr.grown(rr.n_valid - n_del + n_ins)
-            rels[rel] = rr
-            dp = self.delta_program(rel)
-            if dp.steps:
-                n_ins_dev = jax.device_put(np.asarray(n_ins, np.int32))
-                n_del_dev = jax.device_put(np.asarray(n_del, np.int32))
-                runner = self._tick_runner(dp, rr.capacity, ins_pad, del_pad,
-                                           rels, params)
-                state_in = {vid: views[vid] for vid in dp.state_vids}
-                base_cols = {r: dict(rels[r].buffers) for r in dp.base_rels}
-                base_n = {r: rels[r].n_valid_dev for r in dp.base_rels}
-                new_views, bufs, n_valid_dev = runner(
-                    state_in, dict(rr.buffers), rr.n_valid_dev, base_cols,
-                    base_n, ins_dev, del_dev, n_ins_dev, n_del_dev, params)
-                views.update(new_views)
-                rels[rel] = ResidentRelation(rel, bufs,
-                                             rr.n_valid - n_del + n_ins,
-                                             n_valid_dev)
-                n_scans += dp.n_scans
-            else:
-                rels[rel] = rr.advance(ins_dev, del_dev, n_ins, n_del)
+            # phase 2 — functional fold: new arrays only, current epoch
+            # readable throughout; the update's columns cross to the device
+            # exactly once (explicit device_put), relation columns never
+            # cross back
+            views = dict(cur.views)
+            rels = dict(cur.relations)
+            n_scans = 0
+            for rel, ins, del_idx in prepared:
+                with span("ivm.tick", rel=rel):
+                    rr = rels[rel]
+                    n_ins = (0 if ins is None
+                             else int(next(iter(ins.values())).shape[0]))
+                    n_del = 0 if del_idx is None else len(del_idx)
+                    if self.mesh is not None:
+                        n_scans += self._apply_rel_mesh(
+                            views, rels, rel, ins, del_idx, n_ins, n_del,
+                            params)
+                        continue
+                    ins_pad = _pow2(n_ins) if n_ins else 0
+                    del_pad = _pow2(n_del) if n_del else 0
+                    ins_dev = {a: jax.device_put(np.pad(c, (0, ins_pad - n_ins)))
+                               for a, c in (ins or {}).items()}
+                    # delete pads point past the valid region: harmless for
+                    # the compaction scatter, zero-filled by the delta gather
+                    del_dev = jax.device_put(
+                        np.pad(del_idx.astype(np.int32), (0, del_pad - n_del),
+                               constant_values=rr.capacity)
+                        if n_del else np.zeros((0,), np.int32))
+                    rr = rr.grown(rr.n_valid - n_del + n_ins)
+                    rels[rel] = rr
+                    dp = self.delta_program(rel)
+                    if dp.steps:
+                        n_ins_dev = jax.device_put(np.asarray(n_ins, np.int32))
+                        n_del_dev = jax.device_put(np.asarray(n_del, np.int32))
+                        runner = self._tick_runner(dp, rr.capacity, ins_pad,
+                                                   del_pad, rels, params)
+                        state_in = {vid: views[vid] for vid in dp.state_vids}
+                        base_cols = {r: dict(rels[r].buffers)
+                                     for r in dp.base_rels}
+                        base_n = {r: rels[r].n_valid_dev for r in dp.base_rels}
+                        new_views, bufs, n_valid_dev = runner(
+                            state_in, dict(rr.buffers), rr.n_valid_dev,
+                            base_cols, base_n, ins_dev, del_dev, n_ins_dev,
+                            n_del_dev, params)
+                        views.update(new_views)
+                        rels[rel] = ResidentRelation(rel, bufs,
+                                                     rr.n_valid - n_del + n_ins,
+                                                     n_valid_dev)
+                        n_scans += dp.n_scans
+                    else:
+                        rels[rel] = rr.advance(ins_dev, del_dev, n_ins, n_del)
 
-        # phase 3 — atomic publish
-        self._current = EpochState(epoch=cur.epoch + 1, step=cur.step + 1,
-                                   views=views, relations=rels)
-        self.n_delta_scan_steps += n_scans
+            # phase 3 — atomic publish
+            with span("ivm.publish"):
+                self._current = EpochState(epoch=cur.epoch + 1,
+                                           step=cur.step + 1,
+                                           views=views, relations=rels)
+                self.n_delta_scan_steps += n_scans
+        # host dispatch wall of the whole tick (validate + fold + publish);
+        # no block_until_ready — the no-sync instrumentation rule
+        self._tick_hist.observe((time.perf_counter() - t_tick) * 1e6)
         return self.results()
 
     def _tick_runner(self, dp: DeltaProgram, cap: int, ins_pad: int,

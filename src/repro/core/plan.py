@@ -35,6 +35,7 @@ from repro.core.lowering import get_backend
 from repro.core.pushdown import PushdownResult
 from repro.core.schedule import Schedule, build_schedule
 from repro.core.schema import DatabaseSchema
+from repro.obs.trace import span
 
 Columns = Mapping[str, Mapping[str, jnp.ndarray]]  # rel -> attr -> (n,)
 
@@ -89,12 +90,14 @@ class ExecutablePlan:
         self.views = result.views
         self.groups = list(groups)
         self.config = config or PlanConfig()
-        self.programs = build_programs(schema, result.views, self.groups)
-        self.schedule: Schedule = build_schedule(self.groups,
-                                                 fuse=self.config.fuse_scans)
-        self.step_programs: List[StepProgram] = [
-            fuse_programs([self.programs[gid] for gid in step.gids])
-            for step in self.schedule.steps]
+        with span("compile.ir", n_groups=len(self.groups)):
+            self.programs = build_programs(schema, result.views, self.groups)
+        with span("compile.schedule", fuse=self.config.fuse_scans):
+            self.schedule: Schedule = build_schedule(
+                self.groups, fuse=self.config.fuse_scans)
+            self.step_programs: List[StepProgram] = [
+                fuse_programs([self.programs[gid] for gid in step.gids])
+                for step in self.schedule.steps]
         self.backend = get_backend(self.config.backend)
         # param-batch (node) axis bookkeeping (DESIGN.md §7.4)
         self.batched_vids = compute_batched_vids(result.views)
@@ -150,19 +153,23 @@ class ExecutablePlan:
         platform = jax.default_backend()
         interpret = self._interpret_flag(platform)
         out, report = [], []
-        for step, prog in zip(steps, self.step_programs):
-            n_seg, width = self._prog_tune_dims(prog, n_nodes)
-            sig = at.signature_for_step(cfg.backend, platform, interpret,
-                                        n_rows[step.rel], n_seg, width,
-                                        n_nodes)
-            res = self.autotuner.tune(sig)
-            bs = res.block_size if cfg.block_size == "auto" else cfg.block_size
-            br = res.block_rows if cfg.block_rows == "auto" else cfg.block_rows
-            out.append(dataclasses.replace(cfg, block_size=bs, block_rows=br))
-            report.append({"rel": step.rel, "key": sig.key(),
-                           "block_size": bs, "block_rows": br,
-                           "from_cache": res.from_cache,
-                           "fallback": res.fallback})
+        with span("compile.autotune", n_steps=len(steps)):
+            for step, prog in zip(steps, self.step_programs):
+                n_seg, width = self._prog_tune_dims(prog, n_nodes)
+                sig = at.signature_for_step(cfg.backend, platform, interpret,
+                                            n_rows[step.rel], n_seg, width,
+                                            n_nodes)
+                res = self.autotuner.tune(sig)
+                bs = (res.block_size if cfg.block_size == "auto"
+                      else cfg.block_size)
+                br = (res.block_rows if cfg.block_rows == "auto"
+                      else cfg.block_rows)
+                out.append(dataclasses.replace(cfg, block_size=bs,
+                                               block_rows=br))
+                report.append({"rel": step.rel, "key": sig.key(),
+                               "block_size": bs, "block_rows": br,
+                               "from_cache": res.from_cache,
+                               "fallback": res.fallback})
         self.last_autotune = report
         return out
 
@@ -209,19 +216,23 @@ class ExecutablePlan:
         platform = jax.default_backend()
         interpret = self._interpret_flag(platform)
         out, report = [], []
-        for st, rows in zip(steps, n_rows):
-            n_seg, width = self._prog_tune_dims(st.prog, n_nodes)
-            sig = at.signature_for_step(cfg.backend, platform, interpret,
-                                        max(int(rows), 1), n_seg, width,
-                                        n_nodes, delta=st.scans_delta)
-            res = self.autotuner.tune(sig)
-            bs = res.block_size if cfg.block_size == "auto" else cfg.block_size
-            br = res.block_rows if cfg.block_rows == "auto" else cfg.block_rows
-            out.append(dataclasses.replace(cfg, block_size=bs, block_rows=br))
-            report.append({"rel": st.rel, "delta": st.scans_delta,
-                           "key": sig.key(), "block_size": bs,
-                           "block_rows": br, "from_cache": res.from_cache,
-                           "fallback": res.fallback})
+        with span("compile.autotune", n_steps=len(steps), delta=True):
+            for st, rows in zip(steps, n_rows):
+                n_seg, width = self._prog_tune_dims(st.prog, n_nodes)
+                sig = at.signature_for_step(cfg.backend, platform, interpret,
+                                            max(int(rows), 1), n_seg, width,
+                                            n_nodes, delta=st.scans_delta)
+                res = self.autotuner.tune(sig)
+                bs = (res.block_size if cfg.block_size == "auto"
+                      else cfg.block_size)
+                br = (res.block_rows if cfg.block_rows == "auto"
+                      else cfg.block_rows)
+                out.append(dataclasses.replace(cfg, block_size=bs,
+                                               block_rows=br))
+                report.append({"rel": st.rel, "delta": st.scans_delta,
+                               "key": sig.key(), "block_size": bs,
+                               "block_rows": br, "from_cache": res.from_cache,
+                               "fallback": res.fallback})
         self.last_autotune_delta = report
         return out
 
@@ -254,7 +265,8 @@ class ExecutablePlan:
                 "bind with n_nodes (use CompiledBatch.run_batched)")
         # "auto" blocking resolves here, once per bind, outside any trace —
         # the closure runs with concrete per-step configs
-        step_configs = self.resolve_step_configs(n_rows, n_nodes)
+        with span("compile.bind", n_steps=len(self.schedule.steps)):
+            step_configs = self.resolve_step_configs(n_rows, n_nodes)
 
         def run(columns: Columns, params: Params, offsets: Optional[Mapping[str, jnp.ndarray]] = None,
                 psum_axes: Optional[Mapping[str, str]] = None):
@@ -282,7 +294,9 @@ class ExecutablePlan:
             raise ValueError(
                 f"plan has batched params {sorted(self.batched_params)}; "
                 "bind with n_nodes")
-        step_configs = self.resolve_step_configs(n_rows, n_nodes)
+        with span("compile.bind", n_steps=len(self.schedule.steps),
+                  arrays=True):
+            step_configs = self.resolve_step_configs(n_rows, n_nodes)
 
         def run(columns: Columns, params: Params,
                 n_valid: Optional[Mapping[str, jnp.ndarray]] = None,

@@ -1,0 +1,35 @@
+"""Engine-wide observability: tracing spans, metrics, workload recording.
+
+The runtime counterpart to the engine's hard contracts (DESIGN.md §11):
+
+* ``obs.trace``    — nestable timed spans + chrome://tracing export
+  (off by default; ``obs.enable_tracing()`` or ``REPRO_TRACE=1``);
+* ``obs.metrics``  — process-local counters / gauges / fixed-bucket
+  histograms (p50/p95/p99 without stored samples);
+* ``obs.workload`` — bounded recorder of every run/read call's query
+  signature, hit path, and latency (the future view advisor's input);
+* ``obs.log``      — structured, rate-limited logging.
+
+Design rule shared by all four: **never sync the device**.  Telemetry
+reads host clocks around dispatch sites only, so the steady-state
+zero-transfer / zero-retrace contracts hold with everything enabled.
+"""
+
+from repro.obs.log import StructuredLogger, get_logger
+from repro.obs.metrics import (Counter, Gauge, Histogram, Registry,
+                               LATENCY_BUCKETS_US)
+from repro.obs.trace import (Tracer, enabled as tracing_enabled,
+                             export_chrome, get_tracer, span)
+from repro.obs.trace import enable as enable_tracing
+from repro.obs.trace import disable as disable_tracing
+from repro.obs.trace import clear as clear_trace
+from repro.obs.workload import (QuerySignature, WorkloadRecord,
+                                WorkloadRecorder, signature_of)
+
+__all__ = [
+    "span", "enable_tracing", "disable_tracing", "tracing_enabled",
+    "get_tracer", "export_chrome", "clear_trace", "Tracer",
+    "Counter", "Gauge", "Histogram", "Registry", "LATENCY_BUCKETS_US",
+    "QuerySignature", "WorkloadRecord", "WorkloadRecorder", "signature_of",
+    "StructuredLogger", "get_logger",
+]

@@ -1,0 +1,204 @@
+"""Bounded in-memory workload recorder — the view advisor's input.
+
+LMFAO's thesis is that a *batch* of aggregates shares structure; applying
+it to a live workload (ROADMAP item 2: route ad-hoc queries to maintained
+views, advise which wider views to materialize) first requires a record of
+what the workload actually asked: which group-by signatures, through which
+path (full scan, epoch read, pinned serving read), at what latency.  This
+module captures exactly that.
+
+A :class:`QuerySignature` is the *router key* of a query — its group-by
+dims, its static filter predicates, and its aggregate shapes, all rendered
+structurally (no callables, no array values) so signatures hash, compare,
+and serialize stably across sessions.  Two queries with the same signature
+are answerable by the same maintained view; a signature that keeps hitting
+the fallback path is the advisor's materialization candidate.
+
+The :class:`WorkloadRecorder` is a bounded ring (``capacity`` newest
+records kept, older ones counted in ``n_dropped``) fed by every
+``ViewHandle.run``/``run_batched`` and ``ViewServer.read`` call.  It is
+process-local and lock-cheap — recording is one deque append — and exports
+as JSON (``export_json``) in the shape the future advisor consumes:
+per-signature hit counts, hit-path mix, and latency aggregates, plus the
+raw trailing records.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.aggregates import (Constant, Delta, Lambda, Param, Pow,
+                                   Query, Var)
+
+__all__ = ["QuerySignature", "signature_of", "WorkloadRecord",
+           "WorkloadRecorder"]
+
+
+def _render_term(t) -> str:
+    if isinstance(t, Var):
+        return t.attr
+    if isinstance(t, Pow):
+        return f"{t.attr}^{t.k}"
+    if isinstance(t, Constant):
+        if isinstance(t.value, Param):
+            return f"?{t.value.name}"
+        return repr(t.value)
+    if isinstance(t, Lambda):
+        return f"udaf:{t.tag or 'anon'}({','.join(t.attr_order)})"
+    return repr(t.key())
+
+
+def _render_filter(t: Delta) -> str:
+    thr = t.threshold
+    rhs = f"?{thr.name}" if isinstance(thr, Param) else repr(thr)
+    return f"{t.attr}{t.op}{rhs}"
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySignature:
+    """Structural identity of a group-by aggregate query: what the serving
+    router matches on and the advisor aggregates over."""
+
+    dims: Tuple[str, ...]       # group-by attributes, user order
+    filters: Tuple[str, ...]    # rendered Delta predicates, sorted+deduped
+    aggs: Tuple[str, ...]       # one rendered sum-of-products per aggregate
+
+    def key(self) -> str:
+        """Stable string form (dict key / JSON field)."""
+        return (f"dims[{','.join(self.dims)}]"
+                f"|filters[{','.join(self.filters)}]"
+                f"|aggs[{';'.join(self.aggs)}]")
+
+    def to_dict(self) -> Dict[str, list]:
+        return {"dims": list(self.dims), "filters": list(self.filters),
+                "aggs": list(self.aggs)}
+
+
+def signature_of(q: Query) -> QuerySignature:
+    """Extract a query's signature.  ``Delta`` terms are classified as
+    filters (they restrict rows); everything else renders into the
+    aggregate's sum-of-products shape."""
+    filters = set()
+    aggs = []
+    for a in q.aggregates:
+        prods = []
+        for p in a.products:
+            terms = []
+            for t in p.terms:
+                if isinstance(t, Delta):
+                    filters.add(_render_filter(t))
+                else:
+                    terms.append(_render_term(t))
+            prods.append("*".join(terms) if terms else "1")
+        aggs.append("+".join(prods))
+    return QuerySignature(dims=tuple(q.group_by),
+                          filters=tuple(sorted(filters)),
+                          aggs=tuple(aggs))
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadRecord:
+    """One observed call: which view, through which path, how slow."""
+
+    ts: float                   # wall-clock (time.time) at record time
+    kind: str                   # "run" | "run_batched" | "read"
+    view: str                   # registered view (query) name
+    signature: QuerySignature
+    hit: str                    # "full_scan" | "epoch_read" | "batch_scan"
+                                # | "sharded_scan" | "pinned_read"
+    latency_us: float           # host dispatch wall (no device sync)
+    epoch: Optional[int] = None
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"ts": self.ts, "kind": self.kind, "view": self.view,
+                "signature": self.signature.to_dict(), "hit": self.hit,
+                "latency_us": self.latency_us, "epoch": self.epoch}
+
+
+class WorkloadRecorder:
+    """Bounded ring of :class:`WorkloadRecord`; ``capacity=0`` disables
+    recording entirely (every ``record`` is a cheap no-op)."""
+
+    def __init__(self, capacity: int = 4096):
+        if capacity < 0:
+            raise ValueError("workload recorder capacity must be >= 0")
+        self.capacity = capacity
+        self._records: "collections.deque[WorkloadRecord]" = \
+            collections.deque(maxlen=capacity or 1)
+        self._lock = threading.Lock()
+        #: total records ever observed (including those rotated out)
+        self.n_recorded = 0
+
+    @property
+    def enabled(self) -> bool:
+        return self.capacity > 0
+
+    @property
+    def n_dropped(self) -> int:
+        return self.n_recorded - len(self._records)
+
+    def record(self, kind: str, view: str, signature: QuerySignature,
+               hit: str, latency_us: float,
+               epoch: Optional[int] = None) -> None:
+        if not self.capacity:
+            return
+        rec = WorkloadRecord(ts=time.time(), kind=kind, view=view,
+                             signature=signature, hit=hit,
+                             latency_us=latency_us, epoch=epoch)
+        with self._lock:
+            self._records.append(rec)
+            self.n_recorded += 1
+
+    def records(self) -> List[WorkloadRecord]:
+        with self._lock:
+            return list(self._records)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._records.clear()
+            self.n_recorded = 0
+
+    # -- advisor-facing aggregation ------------------------------------------
+
+    def by_signature(self) -> Dict[str, Dict[str, object]]:
+        """Per-signature rollup: call count, hit-path mix, latency mean/max,
+        and the views answering it — the advisor's ranking input."""
+        out: Dict[str, Dict[str, object]] = {}
+        for rec in self.records():
+            key = rec.signature.key()
+            e = out.get(key)
+            if e is None:
+                e = out[key] = {"signature": rec.signature.to_dict(),
+                                "n": 0, "views": set(), "hits": {},
+                                "latency_us_sum": 0.0, "latency_us_max": 0.0}
+            e["n"] += 1
+            e["views"].add(rec.view)
+            e["hits"][rec.hit] = e["hits"].get(rec.hit, 0) + 1
+            e["latency_us_sum"] += rec.latency_us
+            e["latency_us_max"] = max(e["latency_us_max"], rec.latency_us)
+        for e in out.values():
+            e["views"] = sorted(e["views"])
+            e["latency_us_mean"] = e.pop("latency_us_sum") / e["n"]
+        return out
+
+    def to_payload(self) -> Dict[str, object]:
+        return {"capacity": self.capacity, "n_recorded": self.n_recorded,
+                "n_dropped": self.n_dropped,
+                "signatures": self.by_signature(),
+                "records": [r.to_dict() for r in self.records()]}
+
+    def export_json(self, path: Optional[str] = None) -> Dict[str, object]:
+        """The advisor input: write ``path`` if given, return the payload."""
+        payload = self.to_payload()
+        if path is not None:
+            tmp = f"{path}.tmp.{os.getpid()}"
+            with open(tmp, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        return payload

@@ -29,16 +29,32 @@ every tick psums partial deltas *before* the state fold — so the pin / swap
 on every shard, and only ``apply`` (one ``jit(shard_map)`` per updated
 relation) and ``checkpoint`` (one host gather via the snapshot path) touch
 the mesh (DESIGN.md §8).  ``stats()["shard"]`` reports the topology.
+
+Telemetry (DESIGN.md §11): every read and update observes a latency
+histogram (``serve.read_us`` / ``ivm.tick_us``), reads record their query
+signature into the session workload recorder, and a rate-limited warning
+fires when pinned readers fall more than ``warn_epoch_lag`` epochs behind
+head.  All of it follows the no-sync rule — host clocks around dispatch
+sites, never ``block_until_ready`` — so the steady-state zero-transfer /
+zero-retrace contracts hold with telemetry enabled.
 """
 
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict, Optional
 
 import jax.numpy as jnp
 
 from repro.data.relations import DeltaBatchUpdate
+from repro.obs.log import get_logger
+from repro.obs.metrics import Registry
+from repro.obs.trace import span
+from repro.obs.workload import WorkloadRecorder, signature_of
+
+#: seconds between repeated epoch-lag warnings for the same server
+_LAG_WARN_INTERVAL_S = 5.0
 
 
 class EpochView:
@@ -51,11 +67,18 @@ class EpochView:
         self.epoch = epoch
         self._results: Optional[Dict[str, jnp.ndarray]] = None
 
+    @property
+    def epoch_lag(self) -> int:
+        """How many epochs head has advanced past this handle — 0 means
+        the reader sees the newest published state."""
+        return self._mb.epoch - self.epoch
+
     def results(self) -> Dict[str, jnp.ndarray]:
         # the epoch is immutable, so one extraction serves every read
         # through this handle
         if self._results is None:
-            self._results = self._mb.results(epoch=self.epoch)
+            with span("serve.read", epoch=self.epoch):
+                self._results = self._mb.results(epoch=self.epoch)
         return self._results
 
     def __getitem__(self, query_name: str) -> jnp.ndarray:
@@ -70,22 +93,46 @@ class ViewServer:
     are wait-free against writers and pin their epoch for as long as the
     snapshot handle lives."""
 
-    def __init__(self, maintained, max_pinned_epochs: Optional[int] = None):
+    def __init__(self, maintained, max_pinned_epochs: Optional[int] = None,
+                 warn_epoch_lag: Optional[int] = None,
+                 workload: Optional[WorkloadRecorder] = None):
         """``max_pinned_epochs`` bounds how many epochs readers may keep
         device-resident at once (long-lived pins retain whole epochs of
         device memory): past the budget the least-recently-used pin is
         evicted, and reads through an evicted snapshot raise
         :class:`~repro.core.ivm.EpochEvictedError` with a clear message.
-        None leaves pins unbounded (trusted traffic only)."""
+        None leaves pins unbounded (trusted traffic only).
+
+        ``warn_epoch_lag`` sets the lag threshold (head minus the oldest
+        pinned epoch) past which the server logs a rate-limited warning —
+        laggard pins are exactly what exhausts the pin budget.  None
+        disables the warning.  ``workload`` is the session's shared
+        :class:`~repro.obs.workload.WorkloadRecorder`; reads record their
+        query signature into it (one per served view)."""
         if max_pinned_epochs is not None and max_pinned_epochs < 1:
             raise ValueError("max_pinned_epochs must be >= 1 (or None)")
+        if warn_epoch_lag is not None and warn_epoch_lag < 1:
+            raise ValueError("warn_epoch_lag must be >= 1 (or None)")
         self.maintained = maintained
         if max_pinned_epochs is not None:
             self.maintained.max_pinned_epochs = max_pinned_epochs
+        self.warn_epoch_lag = warn_epoch_lag
+        self.workload = workload
         self._write_lock = threading.Lock()
         self.n_reads = 0
         self.n_updates = 0
         self.n_rejected_updates = 0
+        self.n_lag_warnings = 0
+        self._log = get_logger("repro.serve")
+        #: per-server telemetry: read-latency distribution + pin high-water
+        self.metrics = Registry()
+        self._read_hist = self.metrics.histogram("serve.read_us")
+        self._lag_gauge = self.metrics.gauge("serve.epoch_lag")
+        self._pin_hwm = self.metrics.gauge("serve.pinned_epochs_hwm")
+        # query signatures are static per compiled batch — render once
+        self._signatures = {
+            q: signature_of(qo.query)
+            for q, qo in maintained.batch.result.outputs.items()}
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -99,6 +146,37 @@ class ViewServer:
     def epoch(self) -> int:
         return self.maintained.epoch
 
+    # -- telemetry -----------------------------------------------------------
+
+    @property
+    def epoch_lag(self) -> int:
+        """Head minus the oldest pinned epoch (0 with no pins): how far the
+        laggiest live reader is behind the served state."""
+        pinned = self.maintained.pinned_epochs()
+        return (self.maintained.epoch - pinned[0]) if pinned else 0
+
+    def _observe_lag(self) -> None:
+        lag = self.epoch_lag
+        self._lag_gauge.set(lag)
+        self._pin_hwm.max(self.maintained.n_pinned_epochs)
+        if self.warn_epoch_lag is not None and lag > self.warn_epoch_lag:
+            if self._log.warning_every(
+                    _LAG_WARN_INTERVAL_S, "epoch_lag",
+                    "pinned readers lag served head", lag=lag,
+                    threshold=self.warn_epoch_lag,
+                    epoch=self.maintained.epoch,
+                    n_pinned=self.maintained.n_pinned_epochs):
+                self.n_lag_warnings += 1
+
+    def _record_read(self, names, epoch: int, latency_us: float) -> None:
+        if self.workload is None or not self.workload.enabled:
+            return
+        for name in names:
+            sig = self._signatures.get(name)
+            if sig is not None:
+                self.workload.record("read", name, sig, "pinned_read",
+                                     latency_us, epoch=epoch)
+
     # -- read path -----------------------------------------------------------
 
     def snapshot(self):
@@ -110,6 +188,7 @@ class ViewServer:
             def __enter__(pin):
                 pin._epoch = server.maintained.pin()
                 server.n_reads += 1
+                server._observe_lag()
                 return EpochView(server.maintained, pin._epoch)
 
             def __exit__(pin, *exc):
@@ -121,8 +200,15 @@ class ViewServer:
     def read(self, query_name: Optional[str] = None):
         """One-shot consistent read at the current epoch (pin, read, unpin).
         Returns the full results dict, or one query's array."""
+        t0 = time.perf_counter()
         with self.snapshot() as snap:
             out = snap.results()
+            epoch = snap.epoch
+        # host dispatch wall only (no device sync) — DESIGN.md §11
+        us = (time.perf_counter() - t0) * 1e6
+        self._read_hist.observe(us)
+        self._record_read((query_name,) if query_name is not None else out,
+                          epoch, us)
         return out if query_name is None else out[query_name]
 
     # -- write path ----------------------------------------------------------
@@ -138,15 +224,21 @@ class ViewServer:
                 self.n_rejected_updates += 1
                 raise
             self.n_updates += 1
+            self._observe_lag()
             return self.maintained.epoch
 
     def checkpoint(self, ckpt_dir: str, keep: int = 3) -> str:
         """Crash-safe snapshot of a pinned epoch — consistent even while a
         concurrent ``apply`` folds the next one."""
         with self.maintained.pinned() as epoch:
-            return self.maintained.save(ckpt_dir, keep=keep, epoch=epoch)
+            with span("serve.checkpoint", epoch=epoch):
+                return self.maintained.save(ckpt_dir, keep=keep, epoch=epoch)
 
     def stats(self) -> Dict[str, object]:
+        """Counters plus latency distributions: ``read_us`` (this server's
+        one-shot reads) and ``tick_us`` (the maintained batch's ``apply``
+        dispatch wall) carry count/mean/p50/p95/p99 dicts."""
+        mb_metrics = self.maintained.metrics.snapshot()
         return {"epoch": self.maintained.epoch,
                 "step": self.maintained.step,
                 "n_reads": self.n_reads,
@@ -156,4 +248,10 @@ class ViewServer:
                 "n_evicted_pins": self.maintained.n_evicted_pins,
                 "max_pinned_epochs": self.maintained.max_pinned_epochs,
                 "n_delta_scan_steps": self.maintained.n_delta_scan_steps,
+                "epoch_lag": self.epoch_lag,
+                "warn_epoch_lag": self.warn_epoch_lag,
+                "n_lag_warnings": self.n_lag_warnings,
+                "read_us": self._read_hist.snapshot(),
+                "tick_us": mb_metrics.get("ivm.tick_us"),
+                "pinned_epochs_hwm": self._pin_hwm.value,
                 "shard": self.maintained.shard_topology()}

@@ -11,6 +11,12 @@ baseline file carries:
   hard — ``steady_state_retraces`` must stay 0 (a retrace in steady state
   is a jit-cache bug, not noise) and the sharded epochs must stay allclose
   to the single-device recompute; wall times gate loose.
+* ``BENCH_serving.json``: the sustained-load serving stress
+  (``benchmarks/bench_serving.py``).  Contract fields gate hard — zero
+  rejected updates, zero reader-thread errors, eviction churn actually
+  exercised, one recorded workload signature per served view, a
+  non-degenerate latency distribution, and a non-empty trace export;
+  p50/p99 read latency and ticks/s gate loose.
 
 Two classes of metric, gated differently:
 
@@ -81,6 +87,48 @@ def check(current: dict, baseline: dict, *, time_tol: float,
             limit = baseline[t] * (1.0 + time_tol)
             yield (f"ivm/{t}", baseline[t], cur_t, f"<= {limit:.3g}",
                    cur_t is not None and cur_t <= limit)
+
+    # --- BENCH_serving.json schema -----------------------------------
+    if "ticks_per_s" in baseline:
+        # contract fields: hard gates (concurrency bugs, not noise)
+        for c in ("n_rejected_updates", "n_reader_errors"):
+            yield (f"serving/{c}", baseline.get(c), current.get(c),
+                   "== 0", current.get(c) == 0)
+        n_views = current.get("n_served_views")
+        sigs = current.get("served_view_signatures")
+        yield ("serving/served_view_signatures",
+               baseline.get("served_view_signatures"), sigs,
+               f">= {n_views}",
+               sigs is not None and n_views is not None and sigs >= n_views)
+        yield ("serving/n_evictions", baseline.get("n_evictions"),
+               current.get("n_evictions"), ">= 1",
+               (current.get("n_evictions") or 0) >= 1)
+        yield ("serving/trace_events", baseline.get("trace_events"),
+               current.get("trace_events"), ">= 1",
+               (current.get("trace_events") or 0) >= 1)
+        p50 = current.get("read_p50_us")
+        p99 = current.get("read_p99_us")
+        yield ("serving/read_count", baseline.get("read_count"),
+               current.get("read_count"), ">= 1",
+               bool(current.get("read_count")))
+        yield ("serving/read_p50_us_nonzero", baseline.get("read_p50_us"),
+               p50, "> 0", p50 is not None and p50 > 0)
+        yield ("serving/read_p99_ge_p50", baseline.get("read_p99_us"), p99,
+               ">= p50",
+               p99 is not None and p50 is not None and p99 >= p50)
+        # wall times / throughput: loose gates (runner noise)
+        for t in ("read_p50_us", "read_p99_us"):
+            if t not in baseline:
+                continue
+            limit = baseline[t] * (1.0 + time_tol)
+            cur_t = current.get(t)
+            yield (f"serving/{t}", baseline[t], cur_t, f"<= {limit:.3g}",
+                   cur_t is not None and cur_t <= limit)
+        floor = baseline["ticks_per_s"] / (1.0 + time_tol)
+        cur_tps = current.get("ticks_per_s")
+        yield ("serving/ticks_per_s", baseline["ticks_per_s"], cur_tps,
+               f">= {floor:.3g}",
+               cur_tps is not None and cur_tps >= floor)
 
     for name, base in sorted(baseline.get("sharded", {}).items()):
         cur = current.get("sharded", {}).get(name)

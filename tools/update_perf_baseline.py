@@ -5,12 +5,14 @@ Copies a fresh payload (by default the one in the working directory, or
 regenerates it first with ``--run``) over its committed baseline under
 ``benchmarks/baselines/`` after validating its shape.  Default is the
 kernel-roofline baseline (``BENCH_kernels.json``); ``--ivm`` ratchets the
-IVM/sharded baseline (``BENCH_ivm.json``) instead.  Commit the result
-deliberately — the diff IS the perf-trajectory claim the CI gate
-(``tools/perf_gate.py``) enforces from then on.
+IVM/sharded baseline (``BENCH_ivm.json``) and ``--serving`` the
+sustained-load serving baseline (``BENCH_serving.json``) instead.  Commit
+the result deliberately — the diff IS the perf-trajectory claim the CI
+gate (``tools/perf_gate.py``) enforces from then on.
 
     BENCH_SCALE=0.01 PYTHONPATH=src python tools/update_perf_baseline.py --run
     BENCH_SCALE=0.01 PYTHONPATH=src python tools/update_perf_baseline.py --run --ivm
+    BENCH_SCALE=0.01 PYTHONPATH=src python tools/update_perf_baseline.py --run --serving
 """
 
 from __future__ import annotations
@@ -26,6 +28,8 @@ DEFAULT_DST = os.path.join(REPO, "benchmarks", "baselines",
                            "BENCH_kernels.json")
 DEFAULT_DST_IVM = os.path.join(REPO, "benchmarks", "baselines",
                                "BENCH_ivm.json")
+DEFAULT_DST_SERVING = os.path.join(REPO, "benchmarks", "baselines",
+                                   "BENCH_serving.json")
 
 
 def validate(payload: dict) -> None:
@@ -59,6 +63,43 @@ def validate_ivm(payload: dict) -> None:
                              "correctness before moving the perf anchor")
 
 
+def validate_serving(payload: dict) -> None:
+    """The serving contract must hold before the wall numbers mean anything:
+    a baseline captured from a broken run would gate future runs on
+    garbage."""
+    if payload.get("n_rejected_updates") != 0:
+        raise SystemExit("refusing to ratchet: serving run rejected updates")
+    if payload.get("n_reader_errors") != 0:
+        raise SystemExit("refusing to ratchet: reader threads errored "
+                         f"({payload.get('errors')}) — fix the concurrency "
+                         "bug before moving the perf anchor")
+    if not payload.get("read_count"):
+        raise SystemExit("refusing to ratchet: zero reads recorded — the "
+                         "latency distribution is degenerate")
+    p50, p99 = payload.get("read_p50_us"), payload.get("read_p99_us")
+    if not p50 or p99 is None or p99 < p50:
+        raise SystemExit("refusing to ratchet: degenerate read latency "
+                         f"distribution (p50={p50}, p99={p99})")
+    if (payload.get("n_evictions") or 0) < 1:
+        raise SystemExit("refusing to ratchet: eviction churn never "
+                         "exercised (n_evictions == 0)")
+    sigs = payload.get("served_view_signatures")
+    n_views = payload.get("n_served_views")
+    if sigs is None or n_views is None or sigs < n_views:
+        raise SystemExit("refusing to ratchet: workload recorder missed "
+                         f"served views ({sigs} signatures for {n_views} "
+                         "views)")
+
+
+_MODES = {
+    "kernels": ("BENCH_kernels.json", DEFAULT_DST, "bench_kernels",
+                validate),
+    "ivm": ("BENCH_ivm.json", DEFAULT_DST_IVM, "bench_ivm", validate_ivm),
+    "serving": ("BENCH_serving.json", DEFAULT_DST_SERVING, "bench_serving",
+                validate_serving),
+}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--src", default=None, help="fresh payload to promote")
@@ -66,17 +107,23 @@ def main(argv=None) -> int:
     ap.add_argument("--ivm", action="store_true",
                     help="ratchet the IVM/sharded baseline (BENCH_ivm.json) "
                     "instead of the kernel roofline")
+    ap.add_argument("--serving", action="store_true",
+                    help="ratchet the sustained-load serving baseline "
+                    "(BENCH_serving.json) instead of the kernel roofline")
     ap.add_argument("--run", action="store_true",
                     help="regenerate --src via the benchmark module before "
                     "promoting")
     args = ap.parse_args(argv)
-    src = args.src or ("BENCH_ivm.json" if args.ivm else "BENCH_kernels.json")
-    dst = args.dst or (DEFAULT_DST_IVM if args.ivm else DEFAULT_DST)
+    if args.ivm and args.serving:
+        raise SystemExit("--ivm and --serving are mutually exclusive")
+    mode = "ivm" if args.ivm else ("serving" if args.serving else "kernels")
+    default_src, default_dst, mod, validator = _MODES[mode]
+    src = args.src or default_src
+    dst = args.dst or default_dst
 
     if args.run:
         env = dict(os.environ)
         env.setdefault("PYTHONPATH", os.path.join(REPO, "src"))
-        mod = "bench_ivm" if args.ivm else "bench_kernels"
         env["BENCH_JSON_OUT"] = src
         code = ("import json, os\n"
                 f"from benchmarks import {mod}\n"
@@ -89,17 +136,23 @@ def main(argv=None) -> int:
 
     with open(src) as f:
         payload = json.load(f)
-    (validate_ivm if args.ivm else validate)(payload)
+    validator(payload)
     os.makedirs(os.path.dirname(dst), exist_ok=True)
     with open(dst, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"baseline ratcheted: {src} -> {dst}")
-    if args.ivm:
+    if mode == "ivm":
         for name, e in sorted(payload["sharded"].items()):
             print(f"  sharded/{name}: tick={e['tick_us_sharded']:.0f}us "
                   f"read={e['read_us_sharded']:.0f}us "
                   f"retraces={e['steady_state_retraces']}")
+    elif mode == "serving":
+        print(f"  serving: read_p50={payload['read_p50_us']:.0f}us "
+              f"read_p99={payload['read_p99_us']:.0f}us "
+              f"ticks/s={payload['ticks_per_s']:.1f} "
+              f"evictions={payload['n_evictions']} "
+              f"signatures={payload['served_view_signatures']}")
     else:
         for name, e in payload["e2e"].items():
             print(f"  e2e/{name}: speedup_fused_auto="
