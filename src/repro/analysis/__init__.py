@@ -1,0 +1,24 @@
+"""Static analysis over compiled artifacts and the codebase (DESIGN.md §12).
+
+Two halves:
+
+* :mod:`repro.analysis.verify` — an execution-free plan verifier that walks
+  every compiled artifact (group-program IR, shared-scan schedule, delta
+  programs, tick programs, resident relations) and raises structured
+  :class:`~repro.analysis.verify.PlanInvariantError`\\ s before anything runs.
+* :mod:`repro.analysis.lint` — an AST-based engine-contract linter over
+  ``src/`` (host-sync calls, device work in ``obs/``, ``Engine`` outside
+  ``core/``, unthreaded PRNG keys) with a committed allowlist; the CLI
+  wrapper lives at ``tools/lint_contracts.py``.
+"""
+
+from repro.analysis.verify import (PlanInvariantError, VerificationReport,
+                                   verification_enabled, verify_delta_program,
+                                   verify_plan, verify_resident,
+                                   verify_tick_program)
+
+__all__ = [
+    "PlanInvariantError", "VerificationReport", "verification_enabled",
+    "verify_delta_program", "verify_plan", "verify_resident",
+    "verify_tick_program",
+]

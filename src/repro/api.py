@@ -89,6 +89,15 @@ class ExecutionConfig:
     in-memory workload recorder (``Database.workload``) — every run/read
     records its query signature, hit path, and latency there; 0 disables
     recording.
+
+    Verification (DESIGN.md §12): ``verify_plans`` runs the static plan
+    verifier (``repro.analysis.verify``) over every compiled artifact —
+    group programs, the shared-scan schedule, delta and tick programs,
+    resident-relation metadata — raising
+    :class:`~repro.analysis.verify.PlanInvariantError` at compile time on
+    any violated invariant.  ``None`` (default) auto-enables under pytest
+    or when the ``REPRO_VERIFY`` env var is truthy;
+    ``Database.views(debug=True)`` forces it on per batch.
     """
 
     backend: str = "xla"
@@ -107,6 +116,7 @@ class ExecutionConfig:
     max_pinned_epochs: Optional[int] = None
     warn_epoch_lag: Optional[int] = None
     workload_capacity: int = 4096
+    verify_plans: Optional[bool] = None
 
     def __post_init__(self):
         from repro.core.plan import validate_blocking
@@ -119,6 +129,9 @@ class ExecutionConfig:
             raise ValueError("max_pinned_epochs must be >= 1 (or None)")
         if self.warn_epoch_lag is not None and self.warn_epoch_lag < 1:
             raise ValueError("warn_epoch_lag must be >= 1 (or None)")
+        if self.verify_plans not in (None, True, False):
+            raise ValueError("verify_plans must be True, False, or None "
+                             f"(auto); got {self.verify_plans!r}")
         if (not isinstance(self.workload_capacity, int)
                 or isinstance(self.workload_capacity, bool)
                 or self.workload_capacity < 0):
@@ -139,7 +152,8 @@ class ExecutionConfig:
                     fuse_scans=self.fuse_scans, block_rows=self.block_rows,
                     fuse_kernels=self.fuse_kernels,
                     double_buffer=self.double_buffer,
-                    autotune_cache=self.autotune_cache)
+                    autotune_cache=self.autotune_cache,
+                    verify_plans=self.verify_plans)
 
 
 @dataclasses.dataclass
@@ -175,6 +189,9 @@ class ViewReport:
     # device count, mesh axis, partitioned relation, per-shard row/capacity
     # geometry, and the psum count per tick (maintained) or per run (batch)
     shard: Optional[Dict[str, object]] = None
+    # static-verification coverage (DESIGN.md §12): joined summaries of the
+    # plan / delta / tick reports, or None when verification is off
+    verification: Optional[str] = None
 
     @staticmethod
     def _render_autotune(report: list) -> str:
@@ -232,6 +249,8 @@ class ViewReport:
                          f"lag={s.get('epoch_lag', 0)}"
                          + self._render_latency("read", s.get("read_us"))
                          + self._render_latency("tick", s.get("tick_us")))
+        if self.verification:
+            lines.append("  verify: " + self.verification)
         if self.autotune:
             lines.append("  autotune[batch]: "
                          + self._render_autotune(self.autotune))
@@ -514,6 +533,13 @@ class ViewHandle:
                 rep.serving = self._server.stats()
         elif cfg.mesh is not None:
             rep.shard = self._shard_topology_batch()
+        pieces = []
+        if self.compiled.plan.last_verification is not None:
+            pieces.append(self.compiled.plan.last_verification.summary())
+        if mb is not None:
+            pieces.extend(r.summary() for _, r in
+                          sorted(mb.last_verifications.items()))
+        rep.verification = "; ".join(pieces) if pieces else None
         return rep
 
     def _shard_topology_batch(self) -> Dict[str, object]:
@@ -586,7 +612,8 @@ class Database:
 
     def views(self, queries: Sequence[Query], maintain: bool = False, *,
               roots: Optional[Dict[str, str]] = None,
-              warm_rels: Sequence[str] = ()) -> ViewHandle:
+              warm_rels: Sequence[str] = (),
+              debug: bool = False) -> ViewHandle:
         """Compile a query batch into one :class:`ViewHandle`.
 
         ``maintain=False``: a batch view — ``run()``/``run_batched()`` scan
@@ -597,8 +624,12 @@ class Database:
 
         ``roots`` overrides the find-roots layer per query (e.g. rooting
         every covar view at the fact table so fact-only update streams stay
-        delta-only)."""
+        delta-only).  ``debug=True`` forces the static plan verifier on for
+        this batch regardless of the session's ``verify_plans`` setting
+        (DESIGN.md §12) — ``explain()`` then reports the coverage."""
         cfg = self.config
+        if debug and cfg.verify_plans is not True:
+            cfg = cfg.replace(verify_plans=True)
         if maintain:
             mb = self._engine._compile_incremental(
                 queries, root_override=roots, warm_rels=warm_rels,

@@ -238,7 +238,8 @@ class Engine:
                 block_rows=512, fuse_kernels: bool = True,
                 double_buffer: bool = True,
                 autotune_cache: Optional[str] = None,
-                root_override: Optional[Dict[str, str]] = None) -> CompiledBatch:
+                root_override: Optional[Dict[str, str]] = None,
+                verify_plans: Optional[bool] = None) -> CompiledBatch:
         """Deprecated shim over :meth:`_compile` — use the session facade:
         ``repro.connect(..., config=ExecutionConfig(...)).views(queries)``."""
         warnings.warn(
@@ -252,7 +253,8 @@ class Engine:
                              block_rows=block_rows, fuse_kernels=fuse_kernels,
                              double_buffer=double_buffer,
                              autotune_cache=autotune_cache,
-                             root_override=root_override)
+                             root_override=root_override,
+                             verify_plans=verify_plans)
 
     def _compile(self, queries: Sequence[Query], *, multi_root: bool = True,
                  block_size=4096, backend: str = "xla",
@@ -260,7 +262,8 @@ class Engine:
                  block_rows=512, fuse_kernels: bool = True,
                  double_buffer: bool = True,
                  autotune_cache: Optional[str] = None,
-                 root_override: Optional[Dict[str, str]] = None) -> CompiledBatch:
+                 root_override: Optional[Dict[str, str]] = None,
+                 verify_plans: Optional[bool] = None) -> CompiledBatch:
         """Compile a query batch.  ``backend`` selects the lowering path
         (``"xla"``: blocked lax.scan; ``"pallas"``: MXU kernels, with
         ``interpret`` controlling CPU interpret mode — None auto-detects);
@@ -291,7 +294,8 @@ class Engine:
                              interpret=interpret, fuse_scans=fuse_scans,
                              block_rows=block_rows, fuse_kernels=fuse_kernels,
                              double_buffer=double_buffer,
-                             autotune_cache=autotune_cache)
+                             autotune_cache=autotune_cache,
+                             verify_plans=verify_plans)
             # CompiledBatch builds the ExecutablePlan, which emits the
             # compile.ir / compile.schedule child spans
             return CompiledBatch(self.schema, self.tree, result, groups, cfg,
@@ -306,7 +310,8 @@ class Engine:
                             double_buffer: bool = True,
                             autotune_cache: Optional[str] = None,
                             root_override: Optional[Dict[str, str]] = None,
-                            warm_rels: Sequence[str] = ()):
+                            warm_rels: Sequence[str] = (),
+                            verify_plans: Optional[bool] = None):
         """Deprecated shim over :meth:`_compile_incremental` — use
         ``repro.connect(...).views(queries, maintain=True)``."""
         warnings.warn(
@@ -319,7 +324,8 @@ class Engine:
             backend=backend, interpret=interpret, fuse_scans=fuse_scans,
             block_rows=block_rows, fuse_kernels=fuse_kernels,
             double_buffer=double_buffer, autotune_cache=autotune_cache,
-            root_override=root_override, warm_rels=warm_rels)
+            root_override=root_override, warm_rels=warm_rels,
+            verify_plans=verify_plans)
 
     def _compile_incremental(self, queries: Sequence[Query], *,
                              multi_root: bool = True, block_size=4096,
@@ -332,7 +338,8 @@ class Engine:
                              root_override: Optional[Dict[str, str]] = None,
                              warm_rels: Sequence[str] = (),
                              mesh=None, mesh_axis: str = "data",
-                             shard_rel: Optional[str] = None):
+                             shard_rel: Optional[str] = None,
+                             verify_plans: Optional[bool] = None):
         """Compile a query batch for incremental view maintenance: returns a
         :class:`~repro.core.ivm.MaintainedBatch` whose ``init(db)``
         materializes every view as persistent state and whose ``apply``
@@ -374,7 +381,8 @@ class Engine:
                               fuse_kernels=fuse_kernels,
                               double_buffer=double_buffer,
                               autotune_cache=autotune_cache,
-                              root_override=root_override)
+                              root_override=root_override,
+                              verify_plans=verify_plans)
         mb = MaintainedBatch(batch, mesh=mesh, mesh_axis=mesh_axis,
                              shard_rel=shard_rel)
         for rel in warm_rels:

@@ -54,6 +54,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.verify import (verification_enabled,
+                                   verify_delta_program, verify_resident,
+                                   verify_tick_program)
 from repro.core.groups import ViewGroup
 from repro.obs.metrics import Registry
 from repro.obs.trace import span
@@ -131,6 +134,64 @@ class DeltaProgram:
         return (f"Δ{self.rel}: {len(self.affected)} views, "
                 f"{self.n_scans} scans ({sum(s.scans_delta for s in self.steps)} delta, "
                 f"rescans {sorted(self.base_rels)})")
+
+
+@dataclasses.dataclass(frozen=True)
+class TickStep:
+    """One step of a tick, with its runtime obligations made declarative:
+    ``weighted`` steps fold the update's signed ±1 multiplicities into the
+    validity mask; ``partitioned`` steps scanned row-partitioned buffers, so
+    their view deltas in ``psum_vids`` must all-reduce over the mesh axis
+    *before* any later gather or the state fold reads them."""
+
+    prog: StepProgram
+    rel: str
+    scans_delta: bool
+    weighted: bool
+    partitioned: bool
+    psum_vids: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class TickProgram:
+    """The declarative form of one relation's tick: which steps apply
+    update weights, which psum, and which vids the state fold covers.  Both
+    tick runners (local and ``shard_map``) execute exactly this artifact,
+    so the psum-before-fold soundness rule (DESIGN.md §8) is data the
+    verifier can check, not control flow buried in a traced closure."""
+
+    rel: str
+    axis: Optional[str]             # mesh axis name (None = unsharded)
+    shard_rel: Optional[str]        # row-partitioned relation (None = local)
+    steps: Tuple[TickStep, ...]
+    fold_vids: Tuple[int, ...]      # state entries the fold writes
+
+    def summary(self) -> str:
+        n_psum = sum(len(ts.psum_vids) for ts in self.steps)
+        shard = f", {n_psum} psums @{self.axis}" if self.shard_rel else ""
+        return (f"tick Δ{self.rel}: {len(self.steps)} steps, "
+                f"folds {len(self.fold_vids)} views{shard}")
+
+
+def build_tick_program(dp: DeltaProgram, shard_rel: Optional[str] = None,
+                       axis: Optional[str] = None) -> TickProgram:
+    """Lower a delta program to its tick form under a placement: weights
+    ride exactly the delta-tuple scans, and under a mesh every step that
+    scans the partitioned relation (tier-1 delta scan of partitioned delta
+    tuples, or tier-2 rescan of the partitioned base rows) psums all of its
+    view deltas immediately.  Pure — safe to build and verify without a
+    mesh or any device state."""
+    steps = []
+    for st in dp.steps:
+        partitioned = shard_rel is not None and st.rel == shard_rel
+        steps.append(TickStep(
+            prog=st.prog, rel=st.rel, scans_delta=st.scans_delta,
+            weighted=st.scans_delta, partitioned=partitioned,
+            psum_vids=(tuple(vp.vid for vp in st.prog.views)
+                       if partitioned else ())))
+    return TickProgram(rel=dp.rel, axis=axis, shard_rel=shard_rel,
+                       steps=tuple(steps),
+                       fold_vids=tuple(sorted(dp.affected)))
 
 
 def build_delta_program(schema: DatabaseSchema, views: Mapping[int, ViewDef],
@@ -298,6 +359,14 @@ class MaintainedBatch:
         #: tick-runner traces (steady-state applies must not grow this)
         self.n_fold_traces = 0
         self._delta_programs: Dict[str, DeltaProgram] = {}
+        self._tick_programs: Dict[str, TickProgram] = {}
+        # static verification (DESIGN.md §12): checked once per compiled
+        # artifact at build time — never on the per-tick hot path
+        self._verify = verification_enabled(self.plan.config.verify_plans)
+        #: artifact name -> :class:`~repro.analysis.verify.VerificationReport`
+        #: for every delta/tick program verified so far (``explain()`` shows
+        #: them); empty when verification is off
+        self.last_verifications: Dict[str, object] = {}
         self._runners: Dict[Tuple, object] = {}
         self._init_runners: Dict[Tuple, object] = {}
         self._extract = jax.jit(self.plan.extract_outputs)
@@ -391,6 +460,9 @@ class MaintainedBatch:
                 self._resolve_shard_rel(db.sizes())
             rels = {name: self._make_resident(r)
                     for name, r in db.relations.items()}
+            if self._verify:
+                for rr in rels.values():
+                    verify_resident(rr)
             params = dict(params or {})
             caps = {name: rr.capacity for name, rr in rels.items()}
             runner = self._init_runner(caps, rels, params)
@@ -520,10 +592,29 @@ class MaintainedBatch:
     def delta_program(self, rel: str) -> DeltaProgram:
         """The (cached) maintenance plan for updates to ``rel``."""
         if rel not in self._delta_programs:
-            self._delta_programs[rel] = build_delta_program(
+            dp = build_delta_program(
                 self.batch.schema, self.plan.views, rel,
                 fuse=self.plan.config.fuse_scans)
+            if self._verify:
+                self.last_verifications[f"Δ{rel}"] = \
+                    verify_delta_program(self.plan, dp)
+            self._delta_programs[rel] = dp
         return self._delta_programs[rel]
+
+    def tick_program(self, rel: str) -> TickProgram:
+        """The (cached, verified) tick form of ``rel``'s delta program
+        under this batch's placement — the artifact both tick runners
+        execute."""
+        if rel not in self._tick_programs:
+            dp = self.delta_program(rel)
+            shard = self.shard_rel if self.mesh is not None else None
+            axis = self.mesh_axis if self.mesh is not None else None
+            tp = build_tick_program(dp, shard_rel=shard, axis=axis)
+            if self._verify:
+                self.last_verifications[f"tick Δ{rel}"] = \
+                    verify_tick_program(tp, dp)
+            self._tick_programs[rel] = tp
+        return self._tick_programs[rel]
 
     def apply(self, update: DeltaBatchUpdate, params=None) -> Dict[str, jnp.ndarray]:
         """Fold an update batch into view state and the resident relations,
@@ -610,7 +701,11 @@ class MaintainedBatch:
                     else:
                         rels[rel] = rr.advance(ins_dev, del_dev, n_ins, n_del)
 
-            # phase 3 — atomic publish
+            # phase 3 — atomic publish; capacity contracts re-checked on the
+            # advanced relations first (host metadata only — no sync)
+            if self._verify:
+                for rel, _, _ in prepared:
+                    verify_resident(rels[rel])
             with span("ivm.publish"):
                 self._current = EpochState(epoch=cur.epoch + 1,
                                            step=cur.step + 1,
@@ -642,6 +737,7 @@ class MaintainedBatch:
         # degrades to the static defaults on the tick path
         backend = self.plan.backend
         n_delta = ins_pad + del_pad
+        tp = self.tick_program(dp.rel)
         step_cfgs = self.plan.resolve_delta_configs(
             dp.steps, [n_delta if st.scans_delta else base_caps[st.rel]
                        for st in dp.steps])
@@ -669,16 +765,18 @@ class MaintainedBatch:
             # writes: a step's finalize overwrites its vid, so a later
             # gather of an affected child reads its *delta*
             arrays = dict(state)
-            for st, cfg in zip(dp.steps, step_cfgs):
-                if st.scans_delta:
-                    backend.run_step(st.prog, delta_cols, arrays, p,
+            for ts, cfg in zip(tp.steps, step_cfgs):
+                if ts.scans_delta:
+                    backend.run_step(ts.prog, delta_cols, arrays, p,
                                      n_valid=n_delta, offset=0, config=cfg,
-                                     weights=weights)
+                                     weights=weights if ts.weighted
+                                     else None)
                 else:
-                    backend.run_step(st.prog, base_cols[st.rel], arrays, p,
-                                     n_valid=base_n[st.rel], offset=0,
+                    backend.run_step(ts.prog, base_cols[ts.rel], arrays, p,
+                                     n_valid=base_n[ts.rel], offset=0,
                                      config=cfg)
-            new_views = {vid: state[vid] + arrays[vid] for vid in dp.affected}
+            new_views = {vid: state[vid] + arrays[vid]
+                         for vid in tp.fold_vids}
             new_bufs, new_n = _resident_advance(
                 rel_bufs, rel_n, ins, del_idx, n_ins, n_del,
                 compact=bool(del_pad))
@@ -792,6 +890,7 @@ class MaintainedBatch:
         backend = self.plan.backend
         blk = ins_pad // ndev if sharded else ins_pad
         n_delta = blk + del_pad
+        tp = self.tick_program(dp.rel)
         step_cfgs = self.plan.resolve_delta_configs(
             dp.steps, [n_delta if st.scans_delta else base_caps[st.rel]
                        for st in dp.steps])
@@ -802,21 +901,22 @@ class MaintainedBatch:
 
         def scan_steps(state, delta_cols, weights, base_cols, base_n, p):
             arrays = dict(state)
-            for st, cfg in zip(dp.steps, step_cfgs):
-                if st.scans_delta:
-                    backend.run_step(st.prog, delta_cols, arrays, p,
+            for ts, cfg in zip(tp.steps, step_cfgs):
+                if ts.scans_delta:
+                    backend.run_step(ts.prog, delta_cols, arrays, p,
                                      n_valid=n_delta, offset=0, config=cfg,
-                                     weights=weights)
+                                     weights=weights if ts.weighted
+                                     else None)
                 else:
-                    bn = base_n[st.rel]
-                    backend.run_step(st.prog, base_cols[st.rel], arrays, p,
-                                     n_valid=bn[0] if st.rel == srel else bn,
+                    bn = base_n[ts.rel]
+                    backend.run_step(ts.prog, base_cols[ts.rel], arrays, p,
+                                     n_valid=bn[0] if ts.partitioned else bn,
                                      offset=0, config=cfg)
-                if st.rel == srel:
-                    # psum-before-fold: this step scanned partitioned rows
-                    for vp in st.prog.views:
-                        arrays[vp.vid] = jax.lax.psum(arrays[vp.vid], axis)
-            return {vid: state[vid] + arrays[vid] for vid in dp.affected}
+                # psum-before-fold: partitioned-row scans all-reduce their
+                # view deltas before anything downstream reads them
+                for vid in ts.psum_vids:
+                    arrays[vid] = jax.lax.psum(arrays[vid], tp.axis)
+            return {vid: state[vid] + arrays[vid] for vid in tp.fold_vids}
 
         def delta_block(rel_bufs, ins, slots, n_ins_loc, n_del_loc, b):
             delta_cols = {}
@@ -956,6 +1056,9 @@ class MaintainedBatch:
         rels = {name: self._make_resident(
                     Relation(name, {a: conv(c) for a, c in cols.items()}))
                 for name, cols in tree["relations"].items()}
+        if self._verify:
+            for rr in rels.values():
+                verify_resident(rr)
         self._current = EpochState(epoch=int(np.asarray(tree["epoch"])),
                                    step=int(np.asarray(tree["step"])),
                                    views=views, relations=rels)

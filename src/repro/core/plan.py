@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.verify import verification_enabled
 from repro.core.aggregates import Params
 from repro.core.groups import ViewGroup
 from repro.core.ir import (StepProgram, batched_param_names, build_programs,
@@ -73,9 +74,15 @@ class PlanConfig:
     fuse_kernels: bool = True       # whole-step fused kernel launch (pallas)
     double_buffer: bool = True      # manual HBM→VMEM DMA pipeline (pallas)
     autotune_cache: Optional[str] = None  # autotuner cache path override
+    verify_plans: Optional[bool] = None   # static plan verification
+                                          # (DESIGN.md §12); None = auto:
+                                          # on under pytest / REPRO_VERIFY
 
     def __post_init__(self):
         validate_blocking(self.block_size, self.block_rows)
+        if self.verify_plans not in (None, True, False):
+            raise ValueError("verify_plans must be True, False, or None "
+                             f"(auto); got {self.verify_plans!r}")
 
 
 class ExecutablePlan:
@@ -98,6 +105,13 @@ class ExecutablePlan:
             self.step_programs: List[StepProgram] = [
                 fuse_programs([self.programs[gid] for gid in step.gids])
                 for step in self.schedule.steps]
+        #: :class:`~repro.analysis.verify.VerificationReport` of the static
+        #: plan check (DESIGN.md §12), or None when verification is off
+        self.last_verification = None
+        if verification_enabled(self.config.verify_plans):
+            from repro.analysis.verify import verify_plan
+            with span("compile.verify"):
+                self.last_verification = verify_plan(self)
         self.backend = get_backend(self.config.backend)
         # param-batch (node) axis bookkeeping (DESIGN.md §7.4)
         self.batched_vids = compute_batched_vids(result.views)

@@ -9,12 +9,12 @@ this module is the thin bridge the LM side of the framework calls.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import COUNT, Engine, agg, query, sum_of, sum_sq
+from repro.api import ExecutionConfig, connect
+from repro.core import COUNT, query, sum_of, sum_sq
 from repro.data.datasets import Dataset
 
 
@@ -26,8 +26,8 @@ def feature_moments(ds: Dataset, attrs: Optional[Sequence[str]] = None,
     qs = [query("n", [], [COUNT])]
     for a in attrs:
         qs.append(query(f"m_{a}", [], [sum_of(a), sum_sq(a)]))
-    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
-    out = eng.compile(qs, block_size=block_size)(ds.db)
+    sess = connect(ds, config=ExecutionConfig(block_size=block_size))
+    out = sess.views(qs).run()
     n = float(np.asarray(out["n"])[0])
     stats = {}
     for a in attrs:
@@ -46,6 +46,5 @@ def expert_load_aggregate(expert_ids: np.ndarray, n_experts: int) -> np.ndarray:
 
     S = mk_schema([("expert", "categorical", n_experts)], [("Route", ["expert"])])
     db = from_numpy(S, {"Route": {"expert": expert_ids.astype(np.int32)}})
-    eng = Engine(S, sizes=db.sizes())
-    out = eng.compile([query("load", ["expert"], [COUNT])])(db)
+    out = connect(db).views([query("load", ["expert"], [COUNT])]).run()
     return np.asarray(out["load"])[:, 0]

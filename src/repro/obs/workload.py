@@ -129,8 +129,10 @@ class WorkloadRecorder:
         if capacity < 0:
             raise ValueError("workload recorder capacity must be >= 0")
         self.capacity = capacity
+        # maxlen=0 (disabled) keeps the ring genuinely empty — a disabled
+        # recorder allocates nothing beyond this empty deque
         self._records: "collections.deque[WorkloadRecord]" = \
-            collections.deque(maxlen=capacity or 1)
+            collections.deque(maxlen=capacity)
         self._lock = threading.Lock()
         #: total records ever observed (including those rotated out)
         self.n_recorded = 0

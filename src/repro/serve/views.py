@@ -129,10 +129,13 @@ class ViewServer:
         self._read_hist = self.metrics.histogram("serve.read_us")
         self._lag_gauge = self.metrics.gauge("serve.epoch_lag")
         self._pin_hwm = self.metrics.gauge("serve.pinned_epochs_hwm")
-        # query signatures are static per compiled batch — render once
-        self._signatures = {
+        # query signatures are static per compiled batch — render once, and
+        # only when workload recording is on: with workload_capacity=0 the
+        # read path must allocate nothing for telemetry
+        self._signatures = ({
             q: signature_of(qo.query)
             for q, qo in maintained.batch.result.outputs.items()}
+            if workload is not None and workload.enabled else {})
 
     # -- lifecycle -----------------------------------------------------------
 

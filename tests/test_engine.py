@@ -1,6 +1,11 @@
 """Core engine correctness: layers, merging, multi-root, and a hypothesis
 property test — engine output == brute-force (materialize join, then
-aggregate) on random chain schemas/data/queries."""
+aggregate) on random chain schemas/data/queries.
+
+All compilation goes through the session facade (``repro.connect`` →
+``Database.views``); the legacy ``Engine.compile*`` entry points are
+core-internal (enforced by the engine-contract linter, DESIGN.md §12).
+"""
 
 import numpy as np
 import pytest
@@ -10,8 +15,9 @@ try:  # optional dev dependency: only the property test needs it
 except ModuleNotFoundError:
     st = None
 
-from repro.core import (COUNT, Delta, Engine, Lambda, Pow, Var, agg, query,
-                        schema, sum_of, sum_prod)
+from repro.api import ExecutionConfig, connect
+from repro.core import (COUNT, Delta, Lambda, Pow, Var, agg, query, schema,
+                        sum_of, sum_prod)
 from repro.core.groups import group_views, independent_sets
 from repro.core.jointree import JoinTree
 from repro.core.plan import materialize_join
@@ -77,9 +83,9 @@ def test_engine_matches_bruteforce(multi_root, block_size):
     S = chain_schema()
     T = chain_db()
     db = from_numpy(S, T)
-    eng = Engine(S, sizes=db.sizes())
-    batch = eng.compile(QUERIES, multi_root=multi_root, block_size=block_size)
-    out = batch(db)
+    sess = connect(db, config=ExecutionConfig(multi_root=multi_root,
+                                              block_size=block_size))
+    out = sess.views(QUERIES).run()
     for q in QUERIES:
         expect = brute(S, T, q)
         got = np.asarray(out[q.name], dtype=np.float64)
@@ -90,9 +96,8 @@ def test_engine_matches_bruteforce(multi_root, block_size):
 def test_merging_reduces_views():
     S = chain_schema()
     db = from_numpy(S, chain_db())
-    eng = Engine(S, sizes=db.sizes())
-    batch = eng.compile(QUERIES)
-    st_ = batch.stats
+    h = connect(db).views(QUERIES)
+    st_ = h.stats
     assert st_.n_views < st_.n_views_premerge
     assert st_.n_groups >= 1
     assert st_.n_app_aggregates == sum(len(q.aggregates) for q in QUERIES)
@@ -101,18 +106,18 @@ def test_merging_reduces_views():
 def test_multi_root_uses_multiple_roots():
     S = chain_schema()
     db = from_numpy(S, chain_db())
-    eng = Engine(S, sizes=db.sizes())
-    roots = find_roots(eng.tree, QUERIES, db.sizes())
+    tree = JoinTree.build(S, db.sizes())
+    roots = find_roots(tree, QUERIES, db.sizes())
     assert len(set(roots.values())) > 1          # Example 3.3's point
-    sroots = single_root(eng.tree, QUERIES, db.sizes())
+    sroots = single_root(tree, QUERIES, db.sizes())
     assert len(set(sroots.values())) == 1
 
 
 def test_group_dependency_levels():
     S = chain_schema()
     db = from_numpy(S, chain_db())
-    eng = Engine(S, sizes=db.sizes())
-    result = push_down(eng.tree, QUERIES, find_roots(eng.tree, QUERIES, db.sizes()))
+    tree = JoinTree.build(S, db.sizes())
+    result = push_down(tree, QUERIES, find_roots(tree, QUERIES, db.sizes()))
     groups = group_views(result)
     levels = independent_sets(groups)
     seen = set()
@@ -132,10 +137,9 @@ def test_schedule_topology_and_fusion():
 
     ds = D.make("retailer", scale=0.02)
     qs, _ = covar_queries(ds)
-    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
-    batch = eng.compile(qs)
-    groups = batch.groups
-    sched = batch.schedule
+    h = connect(ds).views(qs)
+    groups = h.compiled.groups
+    sched = h.schedule
     # partition of groups
     all_gids = sorted(g for s in sched.steps for g in s.gids)
     assert all_gids == sorted(g.gid for g in groups)
@@ -163,10 +167,9 @@ def test_fused_scans_match_oracle():
 
     ds = D.make("retailer", scale=0.02)
     qs, _ = covar_queries(ds)
-    eng = Engine(ds.schema, edges=ds.edges, sizes=ds.db.sizes())
-    batch = eng.compile(qs)
-    assert batch.stats.n_fused_scans > 0
-    out = batch(ds.db)
+    h = connect(ds).views(qs)
+    assert h.stats.n_fused_scans > 0
+    out = h.run()
     J = materialize_join(ds.schema, ds.tables,
                          order=["Census", "Location", "Weather", "Inventory",
                                 "Items"])
@@ -201,18 +204,16 @@ def test_dynamic_params_no_retrace():
     S = chain_schema()
     T = chain_db()
     db = from_numpy(S, T)
-    eng = Engine(S, sizes=db.sizes())
     q = query("qd", ["x4"], [agg(Var("u"), Delta("x1", "==", Param("t")))])
-    batch = eng.compile([q])
-    o1 = np.asarray(batch(db, params={"t": np.int32(1)}))[0] \
-        if False else batch(db, params={"t": np.int32(1)})["qd"]
-    o2 = batch(db, params={"t": np.int32(2)})["qd"]
+    h = connect(db).views([q])
+    o1 = h.run(params={"t": np.int32(1)})["qd"]
+    o2 = h.run(params={"t": np.int32(2)})["qd"]
     J = materialize_join(S, T, order=["R1", "R2", "R3"])
     for t, o in [(1, o1), (2, o2)]:
         exp = np.zeros(3)
         np.add.at(exp, J["x4"], J["u"] * (J["x1"] == t))
         np.testing.assert_allclose(np.asarray(o)[..., 0], exp, rtol=1e-4, atol=1e-4)
-    assert len(batch._jitted) == 1       # one executable served both
+    assert len(h.compiled._jitted) == 1  # one executable served both
 
 
 # -- hypothesis property test -------------------------------------------------
@@ -247,9 +248,8 @@ else:
     def test_property_engine_equals_bruteforce(case):
         S, T, q = case
         db = from_numpy(S, T)
-        eng = Engine(S, sizes=db.sizes())
-        batch = eng.compile([q], block_size=8)
-        got = np.asarray(batch(db)[q.name], dtype=np.float64)
+        h = connect(db, config=ExecutionConfig(block_size=8)).views([q])
+        got = np.asarray(h.run()[q.name], dtype=np.float64)
 
         J = materialize_join(S, T, order=["L", "R"])
         n = len(J["a"])

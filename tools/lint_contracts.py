@@ -1,0 +1,22 @@
+#!/usr/bin/env python
+"""CI entry point for the engine-contract linter (DESIGN.md §12).
+
+Thin wrapper over :mod:`repro.analysis.lint` that anchors paths at the repo
+root, so ``python tools/lint_contracts.py`` works from any cwd and CI needs
+no PYTHONPATH gymnastics.  Exits non-zero on any violation that survives
+``tools/lint_allowlist.json``.
+"""
+
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis.lint import main  # noqa: E402
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or [str(ROOT / "src")]
+    sys.exit(main(argv + ["--root", str(ROOT),
+                          "--allowlist",
+                          str(ROOT / "tools" / "lint_allowlist.json")]))
