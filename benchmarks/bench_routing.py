@@ -1,0 +1,174 @@
+"""Ad-hoc query routing benchmark (DESIGN.md §13).
+
+Measures the signature router's serving value on Favorita: a maintained
+cube view answers an ad-hoc workload through the three tiers, and the
+payload captures both the *contract* (every tier allclose to a
+from-scratch compile of the same query; zero admission failures; LRU
+eviction actually exercised) and the *latencies* the tiers exist to
+separate — an exact epoch-read and a subsumption re-aggregation are
+microseconds-scale dispatches, while a tier-3 miss pays a full compile.
+
+What it measures (``JSON_PAYLOAD`` → ``BENCH_routing.json`` via
+``benchmarks/run.py``):
+
+* caller-observed routed latency p50/p99 per hit tier (includes
+  ``block_until_ready`` — real serving traffic syncs on the answer) and
+  the first-miss compile wall;
+* the workload hit rate and plan-cache churn (compiles, evictions,
+  per-signature hits) under a bounded cache (capacity 2 here, so the
+  eviction path runs deterministically);
+* contract fields the perf gate holds hard: per-tier allclose vs fresh
+  compiles, zero admission failures, eviction churn exercised.
+
+    PYTHONPATH=src python -m benchmarks.bench_routing
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_SCALE, row
+
+#: machine-readable results of the last ``main()`` run (benchmarks/run.py
+#: writes this out as BENCH_routing.json)
+JSON_PAYLOAD: dict = {}
+
+#: small on purpose: three distinct tier-3 misses through a capacity-2
+#: cache make eviction churn deterministic
+CACHE_CAPACITY = 2
+
+
+def _n_iters() -> int:
+    env = os.environ.get("BENCH_ROUTING_ITERS")
+    if env:
+        return max(int(env), 8)
+    return max(int(round(300 * BENCH_SCALE)), 20)
+
+
+def _pcts(us):
+    arr = np.asarray(us, dtype=np.float64)
+    return float(np.percentile(arr, 50)), float(np.percentile(arr, 99))
+
+
+def main():
+    import jax
+
+    import repro
+    from repro.core import COUNT, query, sum_of
+    from repro.data import datasets as D
+
+    ds = D.make("favorita", scale=BENCH_SCALE)
+    n_iters = _n_iters()
+
+    cfg = repro.ExecutionConfig(route_cache_capacity=CACHE_CAPACITY)
+    sess = repro.connect(ds, config=cfg)
+    cube = query("cube", ["state", "family"], [COUNT, sum_of("units")])
+    sess.views([cube], maintain=True).run()
+
+    # the ad-hoc workload: exact (dims + aggs permuted vs the cube),
+    # subsumed rollups, and three distinct misses for the eviction phase
+    q_exact = query("q_exact", ["family", "state"], [sum_of("units"), COUNT])
+    q_sub_state = query("q_state", ["state"], [COUNT])
+    q_sub_total = query("q_total", [], [sum_of("units"), COUNT])
+    misses = [query("q_stype", ["stype"], [COUNT]),
+              query("q_htype", ["htype"], [COUNT]),
+              query("q_cluster", ["cluster"], [COUNT])]
+
+    def timed_route(q):
+        t0 = time.perf_counter()
+        r = sess.route(q)
+        jax.block_until_ready(r.value)       # the caller's sync
+        return r, (time.perf_counter() - t0) * 1e6
+
+    def fresh(q):
+        return repro.connect(ds, config=cfg).views([q]).run()[q.name]
+
+    def close(a, b):
+        return bool(np.allclose(np.asarray(a), np.asarray(b),
+                                rtol=1e-3, atol=1e-3))
+
+    # -- warm + correctness anchors per tier ------------------------------
+    r0, _ = timed_route(q_exact)
+    allclose_exact = r0.tier == "exact" and close(r0.value, fresh(q_exact))
+    r1, _ = timed_route(q_sub_state)
+    r2, _ = timed_route(q_sub_total)
+    allclose_subsumed = (r1.tier == r2.tier == "subsumed"
+                         and close(r1.value, fresh(q_sub_state))
+                         and close(r2.value, fresh(q_sub_total)))
+    rm, compile_us = timed_route(misses[0])
+    allclose_compiled = rm.tier == "compiled" and close(rm.value,
+                                                        fresh(misses[0]))
+
+    # -- steady-state latency per tier ------------------------------------
+    exact_us, sub_us, cached_us = [], [], []
+    for _ in range(n_iters):
+        r, us = timed_route(q_exact)
+        assert r.tier == "exact"
+        exact_us.append(us)
+        r, us = timed_route(q_sub_state)
+        assert r.tier == "subsumed"
+        sub_us.append(us)
+        r, us = timed_route(misses[0])       # cached plan: exact scan hit
+        assert r.tier == "exact"
+        cached_us.append(us)
+
+    # -- eviction churn: 3 distinct misses through a capacity-2 cache -----
+    for q in misses[1:]:
+        timed_route(q)
+    r_evicted, _ = timed_route(misses[0])    # evicted: recompiles
+
+    st = sess.routing_stats()
+    exact_p50, exact_p99 = _pcts(exact_us)
+    sub_p50, sub_p99 = _pcts(sub_us)
+    cached_p50, cached_p99 = _pcts(cached_us)
+
+    JSON_PAYLOAD.clear()
+    JSON_PAYLOAD.update({
+        "dataset": "favorita", "scale": BENCH_SCALE,
+        "n_iters": n_iters,
+        "cache_capacity": CACHE_CAPACITY,
+        # contract fields (perf gate holds these hard)
+        "allclose_exact": allclose_exact,
+        "allclose_subsumed": allclose_subsumed,
+        "allclose_compiled": allclose_compiled,
+        "n_admission_failures": int(st["n_admission_failures"]),
+        "n_evictions": int(st["n_evictions"]),
+        "evicted_recompiles": bool(r_evicted.tier == "compiled"),
+        "route_hit_rate": float(st["hit_rate"]),
+        "n_queries": int(st["n_queries"]),
+        "n_plans_compiled": int(st["n_plans_compiled"]),
+        "n_base_scans": int(st["n_base_scans"]),
+        "n_reaggs": int(st["n_reaggs"]),
+        # caller-observed (synced) routed latencies per tier
+        "route_exact_p50_us": exact_p50, "route_exact_p99_us": exact_p99,
+        "route_subsumed_p50_us": sub_p50, "route_subsumed_p99_us": sub_p99,
+        "route_cached_scan_p50_us": cached_p50,
+        "route_cached_scan_p99_us": cached_p99,
+        "route_compile_us": compile_us,      # the tier-3 first-miss wall
+    })
+    return [
+        row("routing/exact", exact_p50 / 1e6,
+            f"p99={exact_p99:.0f}us;n={n_iters}"),
+        row("routing/subsumed", sub_p50 / 1e6,
+            f"p99={sub_p99:.0f}us;n={n_iters}"),
+        row("routing/cached_scan", cached_p50 / 1e6,
+            f"p99={cached_p99:.0f}us;n={n_iters}"),
+        row("routing/compile_miss", compile_us / 1e6,
+            f"hit_rate={st['hit_rate']:.3f};"
+            f"plans={st['n_plans_compiled']};"
+            f"evictions={st['n_evictions']};"
+            f"admission_failures={st['n_admission_failures']}"),
+    ]
+
+
+if __name__ == "__main__":
+    lines = main()
+    print("\n".join(lines))
+    path = os.environ.get("BENCH_ROUTING_JSON", "BENCH_routing.json")
+    with open(path, "w") as f:
+        json.dump(JSON_PAYLOAD, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}")

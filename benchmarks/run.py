@@ -5,9 +5,11 @@ scales the synthetic datasets.  Machine-readable payloads are written per
 module — ``BENCH_ivm.json`` (tick latency with/without host round-trips,
 retrace counts), ``BENCH_kernels.json`` (rooflines, fused/autotuned e2e),
 ``BENCH_serving.json`` (sustained-load read p50/p99, ticks/s, eviction
-churn; a chrome-trace sample lands in ``trace_serving.json``) — paths
-overridable via BENCH_IVM_JSON / BENCH_KERNELS_JSON / BENCH_SERVING_JSON —
-so CI can archive the perf trajectory as artifacts.
+churn; a chrome-trace sample lands in ``trace_serving.json``),
+``BENCH_routing.json`` (ad-hoc routing: per-tier latency, hit rate, plan
+cache churn) — paths overridable via BENCH_IVM_JSON / BENCH_KERNELS_JSON /
+BENCH_SERVING_JSON / BENCH_ROUTING_JSON — so CI can archive the perf
+trajectory as artifacts.
 """
 
 from __future__ import annotations
@@ -20,14 +22,15 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_fig5_ablation, bench_ivm, bench_kernels,
-                            bench_serving, bench_table2_views,
+                            bench_routing, bench_serving, bench_table2_views,
                             bench_table3_aggregates, bench_table45_training,
                             bench_tree_frontier)
     print("name,us_per_call,derived")
     ok = True
     for mod in [bench_table2_views, bench_table3_aggregates,
                 bench_table45_training, bench_fig5_ablation, bench_kernels,
-                bench_tree_frontier, bench_ivm, bench_serving]:
+                bench_tree_frontier, bench_ivm, bench_serving,
+                bench_routing]:
         try:
             for line in mod.main():
                 print(line, flush=True)
@@ -41,7 +44,9 @@ def main() -> None:
             (bench_kernels.JSON_PAYLOAD, "BENCH_KERNELS_JSON",
              "BENCH_kernels.json"),
             (bench_serving.JSON_PAYLOAD, "BENCH_SERVING_JSON",
-             "BENCH_serving.json")]:
+             "BENCH_serving.json"),
+            (bench_routing.JSON_PAYLOAD, "BENCH_ROUTING_JSON",
+             "BENCH_routing.json")]:
         if not payload:
             continue
         path = os.environ.get(env, default)

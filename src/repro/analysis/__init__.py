@@ -15,10 +15,11 @@ Two halves:
 from repro.analysis.verify import (PlanInvariantError, VerificationReport,
                                    verification_enabled, verify_delta_program,
                                    verify_plan, verify_resident,
+                                   verify_secondary_program,
                                    verify_tick_program)
 
 __all__ = [
     "PlanInvariantError", "VerificationReport", "verification_enabled",
     "verify_delta_program", "verify_plan", "verify_resident",
-    "verify_tick_program",
+    "verify_secondary_program", "verify_tick_program",
 ]

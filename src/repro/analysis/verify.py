@@ -47,11 +47,12 @@ DELTA_FIRST_ORDER = "delta-first-order"  # one affected factor per product
 WEIGHT_COMPAT = "weight-compat"       # signed ±1 weights only on delta scans
 RESIDENT_CAPACITY = "resident-capacity"  # pow2 capacity, n_valid bounds
 PSUM_BEFORE_FOLD = "psum-before-fold"    # partitioned scan → psum → fold
+ROUTE_SUBSUME = "route-subsume"          # secondary re-aggregation soundness
 
 ALL_INVARIANTS = (
     GATHER_PREFIX, SEGMENT_LAYOUT, ACC_SHAPE, AXIS_FRAME, DTYPE_FLOW,
     SCHEDULE_TOPO, BATCHED_FLAG, DELTA_FIRST_ORDER, WEIGHT_COMPAT,
-    RESIDENT_CAPACITY, PSUM_BEFORE_FOLD,
+    RESIDENT_CAPACITY, PSUM_BEFORE_FOLD, ROUTE_SUBSUME,
 )
 
 
@@ -482,6 +483,57 @@ def verify_tick_program(tp, dp) -> VerificationReport:
               f"state fold covers {tuple(tp.fold_vids)} != affected views "
               f"{tuple(sorted(dp.affected))}")
     return ctx.report(where)
+
+
+def verify_secondary_program(sp) -> VerificationReport:
+    """Verify a serving-router secondary program (``core/subsume.py``):
+    the closed-form re-aggregation answering a routed query from a wider
+    materialized view.  The admission gate for tier-1/tier-2 routed
+    answers — purely structural, like every rule here: group-by
+    derivability (partition refinement), agg-column render equality,
+    domain agreement on shared dims, and the sum/permute geometry the
+    lowered function indexes by."""
+    ctx = _Ctx()
+    src, tgt = sp.source, sp.target
+    art = f"route {src.name!r} -> {tgt.name!r}"
+    ctx.check(len(src.dims) == len(src.domains), ROUTE_SUBSUME, art,
+              f"source dims {src.dims} vs domains {src.domains} ragged")
+    ctx.check(len(tgt.dims) == len(tgt.domains), ROUTE_SUBSUME, art,
+              f"target dims {tgt.dims} vs domains {tgt.domains} ragged")
+    keep = set(tgt.dims)
+    ctx.check(keep <= set(src.dims), ROUTE_SUBSUME, art,
+              f"target group-by {sorted(keep - set(src.dims))} not in the "
+              "source view — coarser groupings only (partition refinement)")
+    src_dom = dict(zip(src.dims, src.domains))
+    for d, n in zip(tgt.dims, tgt.domains):
+        ctx.check(src_dom.get(d) == n, ROUTE_SUBSUME, art,
+                  f"dim {d!r} domain {n} != source's {src_dom.get(d)} — "
+                  "the answer tensor would be mis-shaped")
+    ctx.check(len(sp.col_idx) == len(tgt.aggs), ROUTE_SUBSUME, art,
+              f"{len(sp.col_idx)} column picks for {len(tgt.aggs)} target "
+              "aggregates")
+    for j, i in enumerate(sp.col_idx):
+        ctx.check(0 <= i < len(src.aggs), ROUTE_SUBSUME, art,
+                  f"target column {j} gathers source column {i}, outside "
+                  f"[0, {len(src.aggs)})")
+        ctx.check(src.aggs[i] == tgt.aggs[j], ROUTE_SUBSUME, art,
+                  f"target column {j} ({tgt.aggs[j]!r}) gathers source "
+                  f"column {i} ({src.aggs[i]!r}) — summing a different "
+                  "aggregate would serve wrong answers")
+    exp_sum = tuple(i for i, d in enumerate(src.dims) if d not in keep)
+    ctx.check(tuple(sp.sum_axes) == exp_sum, ROUTE_SUBSUME, art,
+              f"sum axes {tuple(sp.sum_axes)} != the source axes not in "
+              f"the target group-by {exp_sum}")
+    kept = [d for d in src.dims if d in keep]
+    ctx.check(sorted(sp.perm) == list(range(len(kept))), ROUTE_SUBSUME, art,
+              f"{sp.perm} is not a permutation of the {len(kept)} kept "
+              "axes")
+    got = tuple(kept[p] for p in sp.perm) if sorted(sp.perm) == \
+        list(range(len(kept))) else ()
+    ctx.check(got == tuple(tgt.dims), ROUTE_SUBSUME, art,
+              f"permutation yields axis order {got} != target group-by "
+              f"{tuple(tgt.dims)}")
+    return ctx.report(art)
 
 
 def verify_resident(rr) -> VerificationReport:

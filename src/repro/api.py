@@ -98,6 +98,13 @@ class ExecutionConfig:
     any violated invariant.  ``None`` (default) auto-enables under pytest
     or when the ``REPRO_VERIFY`` env var is truthy;
     ``Database.views(debug=True)`` forces it on per batch.
+
+    Routing (DESIGN.md §13): ``route_cache_capacity`` bounds the ad-hoc
+    query router's LRU cache of serving-time compiled plans
+    (``Database.query`` / ``Database.route``); 0 disables caching, so
+    every routed miss is answered by a one-shot ``fallback_scan``.
+    Plans the router compiles are always admission-gated by the static
+    verifier, independent of ``verify_plans``.
     """
 
     backend: str = "xla"
@@ -117,6 +124,7 @@ class ExecutionConfig:
     warn_epoch_lag: Optional[int] = None
     workload_capacity: int = 4096
     verify_plans: Optional[bool] = None
+    route_cache_capacity: int = 32
 
     def __post_init__(self):
         from repro.core.plan import validate_blocking
@@ -137,6 +145,11 @@ class ExecutionConfig:
                 or self.workload_capacity < 0):
             raise ValueError("workload_capacity must be an int >= 0 "
                              "(0 disables recording)")
+        if (not isinstance(self.route_cache_capacity, int)
+                or isinstance(self.route_cache_capacity, bool)
+                or self.route_cache_capacity < 0):
+            raise ValueError("route_cache_capacity must be an int >= 0 "
+                             "(0 disables plan caching)")
         if self.mesh is not None and self.mesh_axis not in self.mesh.shape:
             raise ValueError(f"mesh has no axis {self.mesh_axis!r} "
                              f"(axes: {tuple(self.mesh.shape)})")
@@ -192,6 +205,10 @@ class ViewReport:
     # static-verification coverage (DESIGN.md §12): joined summaries of the
     # plan / delta / tick reports, or None when verification is off
     verification: Optional[str] = None
+    # session query-router stats (DESIGN.md §13): tier hit mix, cache
+    # occupancy, eviction count — None until Database.query has routed
+    # something
+    routing: Optional[Dict[str, object]] = None
 
     @staticmethod
     def _render_autotune(report: list) -> str:
@@ -249,6 +266,17 @@ class ViewReport:
                          f"lag={s.get('epoch_lag', 0)}"
                          + self._render_latency("read", s.get("read_us"))
                          + self._render_latency("tick", s.get("tick_us")))
+        if self.routing is not None and self.routing.get("n_queries"):
+            r = self.routing
+            tiers = r["tiers"]
+            lines.append(
+                f"  routing: n={r['n_queries']} "
+                + " ".join(f"{t}={tiers[t]}" for t in
+                           ("exact", "subsumed", "compiled", "fallback_scan")
+                           if tiers.get(t))
+                + f" hit_rate={r['hit_rate']:.2f}"
+                  f" cache={r['cache_size']}/{r['capacity']}"
+                  f" evicted={r['n_evictions']}")
         if self.verification:
             lines.append("  verify: " + self.verification)
         if self.autotune:
@@ -485,7 +513,8 @@ class ViewHandle:
         if self._server is None:
             self._server = ViewServer(mb, max_pinned_epochs=max_pinned_epochs,
                                       warn_epoch_lag=warn_epoch_lag,
-                                      workload=self._database.workload)
+                                      workload=self._database.workload,
+                                      router=self._database.router)
         elif max_pinned_epochs is not None:
             mb.max_pinned_epochs = max_pinned_epochs
         if not mb.initialized:
@@ -540,6 +569,7 @@ class ViewHandle:
             pieces.extend(r.summary() for _, r in
                           sorted(mb.last_verifications.items()))
         rep.verification = "; ".join(pieces) if pieces else None
+        rep.routing = self._database.routing_stats()
         return rep
 
     def _shard_topology_batch(self) -> Dict[str, object]:
@@ -584,6 +614,10 @@ class Database:
         #: and served read lands here; ``workload.export_json(path)`` is
         #: the future view advisor's input (ROADMAP item 2)
         self.workload = WorkloadRecorder(self.config.workload_capacity)
+        #: registered view handles, in registration order — the query
+        #: router's answerable sources (DESIGN.md §13)
+        self._registered = []
+        self._router = None
 
     # -- data access ---------------------------------------------------------
 
@@ -613,7 +647,7 @@ class Database:
     def views(self, queries: Sequence[Query], maintain: bool = False, *,
               roots: Optional[Dict[str, str]] = None,
               warm_rels: Sequence[str] = (),
-              debug: bool = False) -> ViewHandle:
+              debug: bool = False, register: bool = True) -> ViewHandle:
         """Compile a query batch into one :class:`ViewHandle`.
 
         ``maintain=False``: a batch view — ``run()``/``run_batched()`` scan
@@ -626,7 +660,13 @@ class Database:
         every covar view at the fact table so fact-only update streams stay
         delta-only).  ``debug=True`` forces the static plan verifier on for
         this batch regardless of the session's ``verify_plans`` setting
-        (DESIGN.md §12) — ``explain()`` then reports the coverage."""
+        (DESIGN.md §12) — ``explain()`` then reports the coverage.
+
+        Registered handles (``register=True``, the default) become the
+        query router's answerable sources: :meth:`query` matches routed
+        aggregates against them by signature and, for maintained handles,
+        by subsumption (DESIGN.md §13).  ``register=False`` keeps a handle
+        private (the router uses it for its own cached plans)."""
         cfg = self.config
         if debug and cfg.verify_plans is not True:
             cfg = cfg.replace(verify_plans=True)
@@ -635,14 +675,51 @@ class Database:
                 queries, root_override=roots, warm_rels=warm_rels,
                 mesh=cfg.mesh, mesh_axis=cfg.mesh_axis,
                 shard_rel=cfg.shard_rel, **cfg.compile_kwargs())
-            return ViewHandle(self, mb.batch, maintained=mb)
-        batch = self._engine._compile(queries, root_override=roots,
-                                      **cfg.compile_kwargs())
-        return ViewHandle(self, batch)
+            handle = ViewHandle(self, mb.batch, maintained=mb)
+        else:
+            batch = self._engine._compile(queries, root_override=roots,
+                                          **cfg.compile_kwargs())
+            handle = ViewHandle(self, batch)
+        if register:
+            self._registered.append(handle)
+        return handle
 
     def view(self, q: Query, maintain: bool = False, **kw) -> ViewHandle:
         """Single-query convenience wrapper around :meth:`views`."""
         return self.views([q], maintain=maintain, **kw)
+
+    # -- ad-hoc query routing (DESIGN.md §13) --------------------------------
+
+    @property
+    def router(self):
+        """The session's signature router (created on first use; its LRU
+        plan-cache bound comes from ``config.route_cache_capacity``)."""
+        if self._router is None:
+            from repro.serve.router import QueryRouter
+
+            self._router = QueryRouter(
+                self, capacity=self.config.route_cache_capacity)
+        return self._router
+
+    def route(self, q: Query, params: Optional[Params] = None):
+        """Answer an *arbitrary* group-by aggregate — no prior
+        registration — returning a
+        :class:`~repro.serve.router.RouteResult` with the value plus
+        provenance (tier, answering view, pinned epoch, latency).  Exact
+        and subsumed matches answer from registered views (maintained
+        sources: one pinned epoch, no base scan); misses compile a fresh
+        verified plan and cache it for the next ask."""
+        return self.router.route(q, params=params)
+
+    def query(self, q: Query, params: Optional[Params] = None):
+        """Value-only front door: ``db.query(q)`` → dense answer tensor
+        shaped ``(*[domain(a) for a in q.group_by], n_aggs)``."""
+        return self.route(q, params=params).value
+
+    def routing_stats(self) -> Optional[Dict[str, object]]:
+        """Router telemetry (tier mix, hit rate, cache occupancy), or
+        None if nothing was ever routed in this session."""
+        return None if self._router is None else self._router.stats()
 
 
 def connect(source, config: Optional[ExecutionConfig] = None, *,

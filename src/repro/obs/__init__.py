@@ -24,12 +24,14 @@ from repro.obs.trace import enable as enable_tracing
 from repro.obs.trace import disable as disable_tracing
 from repro.obs.trace import clear as clear_trace
 from repro.obs.workload import (QuerySignature, WorkloadRecord,
-                                WorkloadRecorder, signature_of)
+                                WorkloadRecorder, agg_renders, routable,
+                                signature_of)
 
 __all__ = [
     "span", "enable_tracing", "disable_tracing", "tracing_enabled",
     "get_tracer", "export_chrome", "clear_trace", "Tracer",
     "Counter", "Gauge", "Histogram", "Registry", "LATENCY_BUCKETS_US",
     "QuerySignature", "WorkloadRecord", "WorkloadRecorder", "signature_of",
+    "agg_renders", "routable",
     "StructuredLogger", "get_logger",
 ]

@@ -28,6 +28,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import json
+import numbers
 import os
 import threading
 import time
@@ -36,8 +37,18 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.aggregates import (Constant, Delta, Lambda, Param, Pow,
                                    Query, Var)
 
-__all__ = ["QuerySignature", "signature_of", "WorkloadRecord",
-           "WorkloadRecorder"]
+__all__ = ["QuerySignature", "signature_of", "agg_renders", "routable",
+           "WorkloadRecord", "WorkloadRecorder"]
+
+
+def _norm_const(v) -> str:
+    """Canonical render of a literal constant.  Numeric values normalize
+    through float so ``Delta("x", "<", 5)`` and ``Delta("x", "<", 5.0)``
+    (or a numpy scalar of either) produce the same signature — the router
+    must not miss the cache on spelling."""
+    if isinstance(v, numbers.Real) and not isinstance(v, bool):
+        return repr(float(v))
+    return repr(v)
 
 
 def _render_term(t) -> str:
@@ -48,7 +59,13 @@ def _render_term(t) -> str:
     if isinstance(t, Constant):
         if isinstance(t.value, Param):
             return f"?{t.value.name}"
-        return repr(t.value)
+        return _norm_const(t.value)
+    if isinstance(t, Delta):
+        # selection factors stay *inside* the aggregate render: two queries
+        # share a signature only if each aggregate carries the same filters
+        # (a query-level filter pool would conflate, e.g., one filtered +
+        # one unfiltered column with the same filter applied to both)
+        return f"1[{_render_filter(t)}]"
     if isinstance(t, Lambda):
         return f"udaf:{t.tag or 'anon'}({','.join(t.attr_order)})"
     return repr(t.key())
@@ -56,7 +73,7 @@ def _render_term(t) -> str:
 
 def _render_filter(t: Delta) -> str:
     thr = t.threshold
-    rhs = f"?{thr.name}" if isinstance(thr, Param) else repr(thr)
+    rhs = f"?{thr.name}" if isinstance(thr, Param) else _norm_const(thr)
     return f"{t.attr}{t.op}{rhs}"
 
 
@@ -65,9 +82,13 @@ class QuerySignature:
     """Structural identity of a group-by aggregate query: what the serving
     router matches on and the advisor aggregates over."""
 
-    dims: Tuple[str, ...]       # group-by attributes, user order
+    dims: Tuple[str, ...]       # group-by attributes, sorted
     filters: Tuple[str, ...]    # rendered Delta predicates, sorted+deduped
-    aggs: Tuple[str, ...]       # one rendered sum-of-products per aggregate
+                                # (advisor-facing rollup; matching uses the
+                                # per-aggregate renders, where filters are
+                                # inline factors)
+    aggs: Tuple[str, ...]       # one canonical sum-of-products render per
+                                # aggregate, sorted
 
     def key(self) -> str:
         """Stable string form (dict key / JSON field)."""
@@ -80,26 +101,56 @@ class QuerySignature:
                 "aggs": list(self.aggs)}
 
 
+def _render_agg(a) -> str:
+    """Canonical sum-of-products render of one aggregate.  Multiplication
+    and addition commute, so term renders sort within each product and
+    product renders sort within the sum — semantically identical aggregates
+    written in different orders render identically."""
+    prods = []
+    for p in a.products:
+        terms = sorted(_render_term(t) for t in p.terms)
+        prods.append("*".join(terms) if terms else "1")
+    return "+".join(sorted(prods))
+
+
+def agg_renders(q: Query) -> Tuple[str, ...]:
+    """Canonical render of each aggregate **in query order** — the router's
+    column map: position i of the query's output agg axis carries the
+    aggregate rendered as ``agg_renders(q)[i]``."""
+    return tuple(_render_agg(a) for a in q.aggregates)
+
+
 def signature_of(q: Query) -> QuerySignature:
-    """Extract a query's signature.  ``Delta`` terms are classified as
-    filters (they restrict rows); everything else renders into the
-    aggregate's sum-of-products shape."""
+    """Extract a query's canonical signature.  Group-by order only permutes
+    output axes and aggregate order only permutes output columns, so both
+    sort: two queries share a ``key()`` iff they are answerable from each
+    other by an axis/column shuffle.  ``filters`` is a derived rollup of the
+    ``Delta`` factors (sorted, deduped) kept for the advisor; matching
+    soundness lives in the per-aggregate renders where each filter stays
+    attached to its aggregate."""
     filters = set()
-    aggs = []
     for a in q.aggregates:
-        prods = []
         for p in a.products:
-            terms = []
             for t in p.terms:
                 if isinstance(t, Delta):
                     filters.add(_render_filter(t))
-                else:
-                    terms.append(_render_term(t))
-            prods.append("*".join(terms) if terms else "1")
-        aggs.append("+".join(prods))
-    return QuerySignature(dims=tuple(q.group_by),
+    return QuerySignature(dims=tuple(sorted(q.group_by)),
                           filters=tuple(sorted(filters)),
-                          aggs=tuple(aggs))
+                          aggs=tuple(sorted(agg_renders(q))))
+
+
+def routable(q: Query) -> bool:
+    """Whether the query's signature is a *sound* routing key.  Untagged
+    ``Lambda`` UDAFs render as ``udaf:anon(...)`` — two different callables
+    collide — so queries carrying one must bypass signature matching and
+    the plan cache (the router answers them with a one-shot fallback
+    scan)."""
+    for a in q.aggregates:
+        for p in a.products:
+            for t in p.terms:
+                if isinstance(t, Lambda) and not t.tag:
+                    return False
+    return True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,11 +165,15 @@ class WorkloadRecord:
                                 # | "sharded_scan" | "pinned_read"
     latency_us: float           # host dispatch wall (no device sync)
     epoch: Optional[int] = None
+    route: Optional[str] = None  # router tier for routed queries: "exact" |
+                                 # "subsumed" | "compiled" | "fallback_scan";
+                                 # None for direct (non-routed) calls
 
     def to_dict(self) -> Dict[str, object]:
         return {"ts": self.ts, "kind": self.kind, "view": self.view,
                 "signature": self.signature.to_dict(), "hit": self.hit,
-                "latency_us": self.latency_us, "epoch": self.epoch}
+                "latency_us": self.latency_us, "epoch": self.epoch,
+                "route": self.route}
 
 
 class WorkloadRecorder:
@@ -147,12 +202,14 @@ class WorkloadRecorder:
 
     def record(self, kind: str, view: str, signature: QuerySignature,
                hit: str, latency_us: float,
-               epoch: Optional[int] = None) -> None:
+               epoch: Optional[int] = None,
+               route: Optional[str] = None) -> None:
         if not self.capacity:
             return
         rec = WorkloadRecord(ts=time.time(), kind=kind, view=view,
                              signature=signature, hit=hit,
-                             latency_us=latency_us, epoch=epoch)
+                             latency_us=latency_us, epoch=epoch,
+                             route=route)
         with self._lock:
             self._records.append(rec)
             self.n_recorded += 1
@@ -178,10 +235,13 @@ class WorkloadRecorder:
             if e is None:
                 e = out[key] = {"signature": rec.signature.to_dict(),
                                 "n": 0, "views": set(), "hits": {},
+                                "routes": {},
                                 "latency_us_sum": 0.0, "latency_us_max": 0.0}
             e["n"] += 1
             e["views"].add(rec.view)
             e["hits"][rec.hit] = e["hits"].get(rec.hit, 0) + 1
+            if rec.route is not None:
+                e["routes"][rec.route] = e["routes"].get(rec.route, 0) + 1
             e["latency_us_sum"] += rec.latency_us
             e["latency_us_max"] = max(e["latency_us_max"], rec.latency_us)
         for e in out.values():

@@ -95,7 +95,8 @@ class ViewServer:
 
     def __init__(self, maintained, max_pinned_epochs: Optional[int] = None,
                  warn_epoch_lag: Optional[int] = None,
-                 workload: Optional[WorkloadRecorder] = None):
+                 workload: Optional[WorkloadRecorder] = None,
+                 router=None):
         """``max_pinned_epochs`` bounds how many epochs readers may keep
         device-resident at once (long-lived pins retain whole epochs of
         device memory): past the budget the least-recently-used pin is
@@ -108,7 +109,12 @@ class ViewServer:
         laggard pins are exactly what exhausts the pin budget.  None
         disables the warning.  ``workload`` is the session's shared
         :class:`~repro.obs.workload.WorkloadRecorder`; reads record their
-        query signature into it (one per served view)."""
+        query signature into it (one per served view).
+
+        ``router`` (optional) is the session's signature router
+        (:class:`~repro.serve.router.QueryRouter`); when set, :meth:`query`
+        answers *arbitrary* group-by aggregates through it — the session
+        facade wires this automatically (``ViewHandle.serve()``)."""
         if max_pinned_epochs is not None and max_pinned_epochs < 1:
             raise ValueError("max_pinned_epochs must be >= 1 (or None)")
         if warn_epoch_lag is not None and warn_epoch_lag < 1:
@@ -118,6 +124,7 @@ class ViewServer:
             self.maintained.max_pinned_epochs = max_pinned_epochs
         self.warn_epoch_lag = warn_epoch_lag
         self.workload = workload
+        self.router = router
         self._write_lock = threading.Lock()
         self.n_reads = 0
         self.n_updates = 0
@@ -213,6 +220,19 @@ class ViewServer:
         self._record_read((query_name,) if query_name is not None else out,
                           epoch, us)
         return out if query_name is None else out[query_name]
+
+    def query(self, q, params=None):
+        """Serving-side front door for *ad-hoc* aggregates (DESIGN.md §13):
+        routes ``q`` through the session's signature router — exact /
+        subsumed matches answer from one pinned epoch; misses compile a
+        fresh verified plan — and returns the dense answer tensor.  Use
+        :meth:`read` for the views this server was compiled for."""
+        if self.router is None:
+            raise ValueError(
+                "this ViewServer has no query router attached; create it "
+                "through the session facade (db.views(..., maintain=True)"
+                ".serve()) or pass router= explicitly")
+        return self.router.route(q, params=params).value
 
     # -- write path ----------------------------------------------------------
 

@@ -398,6 +398,34 @@ def test_witness_resident_capacity_sharded():
     _expect("resident-capacity", verify_resident, bad)
 
 
+def test_witness_route_subsume():
+    from repro.analysis.verify import verify_secondary_program
+    from repro.core.subsume import ViewShape, build_secondary_program
+
+    wide = ViewShape("cube", ("x1", "x4"), (3, 3), ("1", "u"))
+    narrow = ViewShape("probe", ("x4",), (3,), ("u",))
+    sp = build_secondary_program(wide, narrow)
+    assert verify_secondary_program(sp).n_checks > 0   # real program: clean
+
+    # dropping the sum axis would answer the wide grouping, not the probe
+    _expect("route-subsume", verify_secondary_program,
+            dataclasses.replace(sp, sum_axes=()))
+    # picking the COUNT column for a SUM(u) target breaks render equality
+    _expect("route-subsume", verify_secondary_program,
+            dataclasses.replace(sp, col_idx=(0,)))
+    # a target dim outside the source view is not derivable
+    _expect("route-subsume", verify_secondary_program,
+            dataclasses.replace(
+                sp, target=dataclasses.replace(narrow, dims=("x3",))))
+    # domain disagreement on a shared dim mis-shapes the answer tensor
+    _expect("route-subsume", verify_secondary_program,
+            dataclasses.replace(
+                sp, target=dataclasses.replace(narrow, domains=(4,))))
+    # a broken output permutation scrambles the user's dim order
+    _expect("route-subsume", verify_secondary_program,
+            dataclasses.replace(sp, perm=(0, 0)))
+
+
 def test_every_invariant_has_a_witness():
     """The witness suite must cover the full DESIGN.md §12 catalog: each
     rule id appears in some test name above (no invariant without a way to

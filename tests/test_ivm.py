@@ -1,7 +1,11 @@
 """IVM correctness: maintained view state must equal from-scratch
 recomputation after any sequence of insert/delete batches, on both lowering
 backends (deterministic sequences + a hypothesis property test), plus the
-update API validation, snapshot/restore, and the streaming ML applications."""
+update API validation, snapshot/restore, and the streaming ML applications.
+
+Everything compiles through the session facade (``repro.connect`` →
+``Database.views``); the legacy ``Engine.compile*`` shims are no longer
+exercised here."""
 
 import jax
 import numpy as np
@@ -12,13 +16,38 @@ try:  # optional dev dependency: only the property test needs it
 except ModuleNotFoundError:
     st = None
 
-from repro.core import (COUNT, Delta, Engine, Lambda, Pow, Var, agg, query,
-                        schema, sum_of)
+from repro.api import ExecutionConfig, connect
+from repro.core import COUNT, Delta, Lambda, Pow, Var, agg, query, schema, \
+    sum_of
 from repro.data import DeltaBatchUpdate, apply_delta, from_numpy
 from repro.data import relations as relmod
 from repro.data.relations import Relation, ResidentRelation
 
 BACKENDS = [("xla", None), ("pallas", True)]  # (backend, interpret)
+
+
+def session(db, backend="xla", interpret=None, block_size=8):
+    return connect(db, config=ExecutionConfig(
+        block_size=block_size, backend=backend, interpret=interpret))
+
+
+def compile_maintained(db, **kw):
+    """A MaintainedBatch through the facade (init stays explicit)."""
+    return session(db, **kw).views(QUERIES, maintain=True).maintained
+
+
+class ScratchOracle:
+    """From-scratch oracle on the facade: compile the batch once, then
+    answer each check by swapping the session's resident relations to the
+    updated database and re-running the shared scan."""
+
+    def __init__(self, db, **kw):
+        self._sess = session(db, **kw)
+        self._handle = self._sess.views(QUERIES)
+
+    def __call__(self, db):
+        self._sess.data = db
+        return self._handle.run()
 
 
 def chain_schema():
@@ -82,12 +111,9 @@ def test_ivm_sequence_matches_scratch(backend, interpret):
     step, on both backends."""
     S = chain_schema()
     db = from_numpy(S, chain_db())
-    eng = Engine(S, sizes=db.sizes())
-    mb = eng.compile_incremental(QUERIES, block_size=8, backend=backend,
-                                 interpret=interpret)
+    mb = compile_maintained(db, backend=backend, interpret=interpret)
     mb.init(db)
-    fresh = eng.compile(QUERIES, block_size=8, backend=backend,
-                        interpret=interpret)
+    fresh = ScratchOracle(db, backend=backend, interpret=interpret)
     rng = np.random.default_rng(3)
     updates = [
         # fact-ish update
@@ -114,8 +140,7 @@ def test_delta_program_structure():
     update rescans downstream relations, and programs are cached."""
     S = chain_schema()
     db = from_numpy(S, chain_db())
-    eng = Engine(S, sizes=db.sizes())
-    mb = eng.compile_incremental(QUERIES)
+    mb = compile_maintained(db)
     dp = mb.delta_program("R2")
     assert any(s.scans_delta for s in dp.steps)
     assert all(s.rel == "R2" for s in dp.steps if s.scans_delta)
@@ -131,10 +156,9 @@ def test_runner_cache_bounded_under_growth():
     pad to pow2 with dynamic validity, so jit entries grow log₂ with size."""
     S = chain_schema()
     db = from_numpy(S, chain_db())
-    eng = Engine(S, sizes=db.sizes())
-    mb = eng.compile_incremental(QUERIES, block_size=8)
+    mb = compile_maintained(db)
     mb.init(db)
-    fresh = eng.compile(QUERIES, block_size=8)
+    fresh = ScratchOracle(db)
     rng = np.random.default_rng(1)
     for _ in range(5):
         # R2 grows every tick while R1's delta program rescans it; without
@@ -152,8 +176,7 @@ def test_runner_cache_bounded_under_growth():
 def test_apply_requires_init():
     S = chain_schema()
     db = from_numpy(S, chain_db())
-    eng = Engine(S, sizes=db.sizes())
-    mb = eng.compile_incremental(QUERIES)
+    mb = compile_maintained(db)
     with pytest.raises(ValueError, match="init"):
         mb.apply(DeltaBatchUpdate().insert("R1", _ROW_MAKERS["R1"](
             np.random.default_rng(0), 2)))
@@ -164,8 +187,7 @@ def test_snapshot_restore_roundtrip(tmp_path):
     applying updates; state and results must carry over exactly."""
     S = chain_schema()
     db = from_numpy(S, chain_db())
-    eng = Engine(S, sizes=db.sizes())
-    mb = eng.compile_incremental(QUERIES, block_size=8)
+    mb = compile_maintained(db)
     mb.init(db)
     rng = np.random.default_rng(5)
     upd = (DeltaBatchUpdate().insert("R2", _ROW_MAKERS["R2"](rng, 3))
@@ -174,7 +196,7 @@ def test_snapshot_restore_roundtrip(tmp_path):
     db = apply_delta(db, upd)
     mb.save(str(tmp_path))
 
-    mb2 = eng.compile_incremental(QUERIES, block_size=8)
+    mb2 = compile_maintained(db)
     assert mb2.restore(str(tmp_path)) == 1
     assert mb2.step == 1
     r1, r2 = mb.results(), mb2.results()
@@ -184,8 +206,7 @@ def test_snapshot_restore_roundtrip(tmp_path):
     upd2 = DeltaBatchUpdate().insert("R3", _ROW_MAKERS["R3"](rng, 4))
     mb2.apply(upd2)
     db = apply_delta(db, upd2)
-    fresh = eng.compile(QUERIES, block_size=8)
-    assert_matches_scratch(mb2, fresh, db)
+    assert_matches_scratch(mb2, ScratchOracle(db), db)
 
 
 # -- epoch versioning / transactional apply -----------------------------------
@@ -196,8 +217,7 @@ def test_rejected_batch_is_clean_noop():
     folded R1 before noticing R3's bad rows, leaving state half-updated."""
     S = chain_schema()
     db = from_numpy(S, chain_db())
-    eng = Engine(S, sizes=db.sizes())
-    mb = eng.compile_incremental(QUERIES, block_size=8)
+    mb = compile_maintained(db)
     mb.init(db)
     before = {q.name: np.asarray(v).copy()
               for q, v in zip(QUERIES, [mb.results()[q.name] for q in QUERIES])}
@@ -217,7 +237,7 @@ def test_rejected_batch_is_clean_noop():
     good = DeltaBatchUpdate().insert("R1", _ROW_MAKERS["R1"](rng, 2))
     mb.apply(good)
     db = apply_delta(db, good)
-    assert_matches_scratch(mb, eng.compile(QUERIES, block_size=8), db)
+    assert_matches_scratch(mb, ScratchOracle(db), db)
 
     # an out-of-range delete index is caught up front too
     with pytest.raises(ValueError, match="outside"):
@@ -231,10 +251,9 @@ def test_pinned_epoch_frozen_across_apply():
     after a concurrent apply publishes e+1; unpinned reads see e+1."""
     S = chain_schema()
     db = from_numpy(S, chain_db())
-    eng = Engine(S, sizes=db.sizes())
-    mb = eng.compile_incremental(QUERIES, block_size=8)
+    mb = compile_maintained(db)
     mb.init(db)
-    fresh = eng.compile(QUERIES, block_size=8)
+    fresh = ScratchOracle(db)
     rng = np.random.default_rng(7)
     with mb.pinned() as e:
         before = {q.name: np.asarray(mb.results(epoch=e)[q.name]).copy()
@@ -261,9 +280,7 @@ def test_steady_state_tick_no_transfers_no_retrace(backend, interpret):
     the transfer guard permits) and zero retraces, on both backends."""
     S = chain_schema()
     db = from_numpy(S, chain_db())
-    eng = Engine(S, sizes=db.sizes())
-    mb = eng.compile_incremental(QUERIES, block_size=8, backend=backend,
-                                 interpret=interpret)
+    mb = compile_maintained(db, backend=backend, interpret=interpret)
     mb.init(db)
     rng = np.random.default_rng(13)
 
@@ -281,8 +298,7 @@ def test_steady_state_tick_no_transfers_no_retrace(backend, interpret):
             jax.block_until_ready(out["q_count"])
     assert mb.n_fold_traces + relmod.advance_trace_count() == traces0
     # still correct after the guarded ticks
-    fresh = eng.compile(QUERIES, block_size=8, backend=backend,
-                        interpret=interpret)
+    fresh = ScratchOracle(mb.db, backend=backend, interpret=interpret)
     assert_matches_scratch(mb, fresh, mb.db)
 
 
@@ -328,13 +344,13 @@ def test_non_invertible_aggregate_rejected():
     while the batch path still compiles them."""
     S = chain_schema()
     db = from_numpy(S, chain_db())
-    eng = Engine(S, sizes=db.sizes())
+    sess = session(db)
     qs = [query("q_softmax_max", [], [agg(Lambda(
         ("u",), lambda u, p: u, tag="running_max", invertible=False))])]
     with pytest.raises(ValueError, match="not invertible"):
-        eng.compile_incremental(qs)
-    eng.compile(qs)                                   # batch path: fine
-    eng.compile_incremental(QUERIES)                  # SUM-like: fine
+        sess.views(qs, maintain=True)
+    sess.views(qs)                                    # batch path: fine
+    sess.views(QUERIES, maintain=True)                # SUM-like: fine
 
 
 # -- update API validation ----------------------------------------------------
@@ -397,12 +413,9 @@ else:
         backend, interpret = BACKENDS[backend_i]
         S = chain_schema()
         db = from_numpy(S, chain_db(seed=seed % 97))
-        eng = Engine(S, sizes=db.sizes())
-        mb = eng.compile_incremental(QUERIES, block_size=8, backend=backend,
-                                     interpret=interpret)
+        mb = compile_maintained(db, backend=backend, interpret=interpret)
         mb.init(db)
-        fresh = eng.compile(QUERIES, block_size=8, backend=backend,
-                            interpret=interpret)
+        fresh = ScratchOracle(db, backend=backend, interpret=interpret)
         rng = np.random.default_rng(seed)
         for _ in range(n_updates):
             upd = rand_update(rng, db.sizes())

@@ -164,12 +164,61 @@ def test_query_signatures_render_structurally():
     sigs = {q.name: signature_of(q) for q in QUERIES}
     assert sigs["q_count"].dims == () and sigs["q_count"].aggs == ("1",)
     assert sigs["q_g1"].dims == ("x1",) and sigs["q_g1"].aggs == ("1", "u")
-    assert sigs["q_delta"].filters == ("x1==1",)
-    assert sigs["q_delta"].aggs == ("u",)
+    # filters: advisor-facing rollup (normalized constants); matching
+    # soundness lives in the per-agg renders, where the Delta factor rides
+    # inline so it stays attached to its aggregate
+    assert sigs["q_delta"].filters == ("x1==1.0",)
+    assert sigs["q_delta"].aggs == ("1[x1==1.0]*u",)
     # stable, distinct keys
     keys = {s.key() for s in sigs.values()}
     assert len(keys) == 3
     assert sigs["q_g1"].key() == signature_of(QUERIES[1]).key()
+
+
+def test_signature_canonicalization_commutes():
+    """Routing equality (DESIGN.md §13): signatures are order-insensitive
+    in group-by dims, aggregate order, and product term order, and
+    normalize filter constants — semantically identical queries must not
+    miss the router's cache on spelling."""
+    from repro.core import Pow
+    from repro.obs.workload import agg_renders
+
+    a = query("qa", ["x1", "x4"], [COUNT, sum_of("u")])
+    b = query("qb", ["x4", "x1"], [sum_of("u"), COUNT])   # permuted both
+    assert signature_of(a).key() == signature_of(b).key()
+
+    # term order within a product commutes
+    c = query("qc", ["x4"], [agg(Var("u"), Delta("x1", "==", 1))])
+    d = query("qd", ["x4"], [agg(Delta("x1", "==", 1), Var("u"))])
+    assert signature_of(c).key() == signature_of(d).key()
+
+    # filter constants normalize: int 5 == float 5.0 == np.float32(5)
+    e = query("qe", [], [agg(Var("u"), Delta("x2", "<", 2))])
+    f = query("qf", [], [agg(Var("u"), Delta("x2", "<", 2.0))])
+    g = query("qg", [], [agg(Var("u"), Delta("x2", "<", np.float32(2)))])
+    assert signature_of(e).key() == signature_of(f).key() \
+        == signature_of(g).key()
+
+    # but different structure stays distinct
+    assert signature_of(a).key() != signature_of(c).key()
+    assert signature_of(e).key() != \
+        signature_of(query("qh", [], [agg(Var("u"),
+                                          Delta("x2", "<", 3))])).key()
+    assert signature_of(query("qi", [], [sum_of("u")])).key() != \
+        signature_of(query("qj", [], [agg(Pow("u", 2))])).key()
+
+    # agg_renders preserves query order (the router's column map) while
+    # signature_of sorts
+    k = query("qk", [], [sum_of("u"), COUNT])
+    assert agg_renders(k) == ("u", "1")
+    assert signature_of(k).aggs == ("1", "u")
+
+    # a filter attached to one agg differs from the same filter on both
+    m = query("qm", [], [agg(Var("u"), Delta("x1", "==", 1)), COUNT])
+    n = query("qn", [], [agg(Var("u"), Delta("x1", "==", 1)),
+                         agg(Delta("x1", "==", 1))])
+    assert signature_of(m).key() != signature_of(n).key()
+    assert signature_of(m).filters == signature_of(n).filters
 
 
 def test_workload_recorder_bounded_and_aggregates(tmp_path):

@@ -1,0 +1,458 @@
+"""Ad-hoc query routing (DESIGN.md §13): the signature router must answer
+arbitrary group-by aggregates *correctly* from whatever the session has —
+exact view matches, subsumption re-aggregation over wider maintained cube
+views, or verified compile-and-cache — on both lowering backends, with the
+tier contracts holding structurally:
+
+* tier-1/2 answers from maintained views never scan base relations
+  (asserted on the handle's dispatch counter and the router's scan
+  counters);
+* every routed answer equals a from-scratch compile of the same query;
+* maintained-source answers are epoch-consistent under a concurrent
+  updater (each routed value matches the replayed oracle *at its epoch*);
+* the plan cache is a bounded LRU with per-signature hit counters;
+* every router-compiled plan passes the static verifier before it answers
+  anything or enters the cache;
+* sharded sessions route identically to single-device ones.
+"""
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.analysis.verify import PlanInvariantError
+from repro.api import ExecutionConfig, connect
+from repro.core import COUNT, Delta, Lambda, Var, agg, query, schema, sum_of
+from repro.core.aggregates import Param
+from repro.data import DeltaBatchUpdate, apply_delta, from_numpy
+from repro.serve.router import QueryRouter
+
+BACKENDS = [("xla", None), ("pallas", True)]
+
+
+def chain_schema():
+    return schema(
+        [("x1", "categorical", 3), ("x2", "key", 4), ("x3", "key", 5),
+         ("x4", "categorical", 3), ("u", "continuous", 0)],
+        [("R1", ["x1", "x2"]), ("R2", ["x2", "x3", "u"]), ("R3", ["x3", "x4"])])
+
+
+def chain_db(seed=0, n1=17, n2=29, n3=13):
+    rng = np.random.default_rng(seed)
+    return {"R1": {"x1": rng.integers(0, 3, n1), "x2": rng.integers(0, 4, n1)},
+            "R2": {"x2": rng.integers(0, 4, n2), "x3": rng.integers(0, 5, n2),
+                   "u": rng.normal(size=n2).astype(np.float32)},
+            "R3": {"x3": rng.integers(0, 5, n3), "x4": rng.integers(0, 3, n3)}}
+
+
+# the maintained "cube": wide group-bys whose signature lattice covers the
+# narrow ad-hoc probes below
+CUBE = [
+    query("cube_g14", ["x1", "x4"], [COUNT, sum_of("u")]),
+    query("cube_g2", ["x2"], [sum_of("u")]),
+]
+
+# ad-hoc probes: exact (dims AND aggs permuted vs cube_g14 — the match is
+# canonical, not spelling), subsumed (strictly narrower), and a miss
+Q_EXACT = query("q_exact", ["x4", "x1"], [sum_of("u"), COUNT])
+Q_SUB = query("q_sub", ["x4"], [COUNT])
+Q_TOTAL = query("q_total", [], [sum_of("u"), COUNT])
+Q_MISS = query("q_miss", ["x3"], [COUNT])
+
+
+def session(db, capacity=32, backend="xla", interpret=None, **kw):
+    return connect(db, config=ExecutionConfig(
+        block_size=8, backend=backend, interpret=interpret,
+        route_cache_capacity=capacity, **kw))
+
+
+def fresh_answer(db, q, backend="xla", interpret=None):
+    """From-scratch oracle: an independent session compiling exactly q."""
+    return session(db, backend=backend, interpret=interpret) \
+        .views([q]).run()[q.name]
+
+
+def assert_answer(got, db, q, **kw):
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(fresh_answer(db, q, **kw)),
+                               rtol=1e-3, atol=1e-3, err_msg=q.name)
+
+
+# -- tier correctness ---------------------------------------------------------
+
+@pytest.mark.parametrize("backend,interpret", BACKENDS,
+                         ids=["xla", "pallas-interpret"])
+def test_three_tiers_match_scratch_oracle(backend, interpret):
+    """Every tier's answer equals a from-scratch compile of the same query,
+    and tier-1/2 answers come from the pinned epoch, not a base scan."""
+    if backend == "pallas":
+        pytest.importorskip("jax.experimental.pallas")
+    db = from_numpy(chain_schema(), chain_db())
+    sess = session(db, backend=backend, interpret=interpret)
+    h = sess.views(CUBE, maintain=True)
+    h.run()                                  # epoch 0 published
+    dispatches0 = h.compiled.n_dispatches
+
+    # tier 1: exact, with group-by AND aggregate order permuted
+    r = sess.route(Q_EXACT)
+    assert r.tier == "exact" and r.source == "cube_g14"
+    assert not r.scanned and r.epoch == 0
+    assert np.asarray(r.value).shape == (3, 3, 2)   # user dim order + aggs
+    assert_answer(r.value, db, Q_EXACT, backend=backend, interpret=interpret)
+
+    # tier 2: strictly narrower group-bys re-aggregate the cube tensor
+    for q in (Q_SUB, Q_TOTAL):
+        r = sess.route(q)
+        assert r.tier == "subsumed" and r.source == "cube_g14"
+        assert not r.scanned and r.epoch == 0
+        assert_answer(r.value, db, q, backend=backend, interpret=interpret)
+
+    # no base relations were scanned for tiers 1-2
+    assert h.compiled.n_dispatches == dispatches0
+    assert sess.router.n_base_scans == 0
+    assert sess.router.n_reaggs == 2
+
+    # tier 3: nothing answers x3 — compile, admit, cache, scan once
+    r = sess.route(Q_MISS)
+    assert r.tier == "compiled" and r.source is None and r.scanned
+    assert_answer(r.value, db, Q_MISS, backend=backend, interpret=interpret)
+    assert sess.router.n_plans_compiled == 1
+    assert sess.router.n_base_scans == 1
+
+    # the miss is now cached: the repeat is an exact hit on the cached
+    # plan's scan (not a recompile), still correct
+    r2 = sess.route(Q_MISS)
+    assert r2.tier == "exact" and r2.source == "q_miss" and r2.scanned
+    assert sess.router.n_plans_compiled == 1
+    np.testing.assert_allclose(np.asarray(r2.value), np.asarray(r.value))
+
+    st = sess.routing_stats()
+    assert st["n_queries"] == 5
+    assert st["tiers"] == {"exact": 2, "subsumed": 2, "compiled": 1,
+                           "fallback_scan": 0}
+    assert st["hit_rate"] == pytest.approx(4 / 5)
+    assert st["n_admission_failures"] == 0
+
+
+def test_subsumption_tracks_updates_without_scanning():
+    """After delta batches fold into the cube, tier-2 answers re-aggregate
+    the *new* epoch tensor — correct w.r.t. the updated database, still
+    with zero base scans."""
+    S = chain_schema()
+    db = from_numpy(S, chain_db())
+    sess = session(db)
+    h = sess.views(CUBE, maintain=True)
+    h.run()
+    rng = np.random.default_rng(11)
+    cur = db
+    for i in range(3):
+        upd = DeltaBatchUpdate().insert(
+            "R2", {"x2": rng.integers(0, 4, 4), "x3": rng.integers(0, 5, 4),
+                   "u": rng.normal(size=4).astype(np.float32)})
+        if i == 1:
+            upd.delete("R1", np.array([0, 3]))
+        h.apply(upd)
+        cur = apply_delta(cur, upd)
+        r = sess.route(Q_SUB)
+        assert r.tier == "subsumed" and not r.scanned and r.epoch == i + 1
+        assert_answer(r.value, cur, Q_SUB)
+    assert sess.router.n_base_scans == 0
+
+
+def test_epoch_consistency_under_concurrent_updater():
+    """Routed maintained-source answers pin one epoch: with an updater
+    folding batches concurrently, every routed value must equal the
+    replayed oracle at exactly the epoch the result reports — never a torn
+    mix of two epochs."""
+    S = chain_schema()
+    db = from_numpy(S, chain_db())
+    sess = session(db)
+    h = sess.views(CUBE, maintain=True)
+    srv = h.serve()                         # started: epoch 0 published
+
+    rng = np.random.default_rng(23)
+    updates = [DeltaBatchUpdate().insert(
+        "R2", {"x2": rng.integers(0, 4, 3), "x3": rng.integers(0, 5, 3),
+               "u": rng.normal(size=3).astype(np.float32)})
+        for _ in range(5)]
+    # replayed database per epoch (epoch e == after e folds)
+    db_at = [db]
+    for upd in updates:
+        db_at.append(apply_delta(db_at[-1], upd))
+
+    got, done = [], threading.Event()
+
+    def reader():
+        while not done.is_set():
+            r = sess.route(Q_SUB)
+            got.append((r.epoch, np.asarray(r.value)))
+        r = sess.route(Q_SUB)           # one read at the final epoch
+        got.append((r.epoch, np.asarray(r.value)))
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        for upd in updates:
+            srv.apply(upd)
+            time.sleep(0.02)
+    finally:
+        done.set()
+        t.join()
+
+    # data-swap oracle: one compile answers every epoch's expectation
+    osess = session(db)
+    oh = osess.views([Q_SUB])
+    assert len(got) >= 2 and {e for e, _ in got} <= set(range(6))
+    for epoch, value in got:
+        assert epoch is not None
+        osess.data = db_at[epoch]
+        np.testing.assert_allclose(value, np.asarray(oh.run()[Q_SUB.name]),
+                                   rtol=1e-3, atol=1e-3,
+                                   err_msg=f"epoch {epoch}")
+
+
+# -- plan cache ---------------------------------------------------------------
+
+def test_lru_eviction_and_readmission():
+    """capacity=1: the second distinct miss evicts the first; re-asking the
+    evicted signature recompiles (and re-admits) it; a repeat then hits."""
+    db = from_numpy(chain_schema(), chain_db())
+    sess = session(db, capacity=1)
+    qa = query("qa", ["x1"], [COUNT])
+    qb = query("qb", ["x3"], [sum_of("u")])
+
+    assert sess.route(qa).tier == "compiled"
+    assert sess.route(qa).tier == "exact"            # cached
+    assert sess.route(qb).tier == "compiled"         # evicts qa
+    rt = sess.router
+    assert rt.n_evictions == 1 and len(rt._cache) == 1
+    assert sess.route(qa).tier == "compiled"         # re-admitted
+    assert rt.n_plans_compiled == 3
+    # 3 plan admissions + one secondary-program check per exact hit
+    assert rt.n_admission_checks >= 3 and rt.n_admission_failures == 0
+    assert sess.route(qa).tier == "exact"
+    stats = rt.cache_stats()
+    assert len(stats) == 1 and stats[0]["hits"] == 1
+    assert rt.hit_rate == pytest.approx(2 / 5)
+
+
+def test_cache_capacity_zero_disables_caching():
+    """capacity=0: every miss is a one-shot fallback_scan, nothing cached,
+    answers still correct."""
+    db = from_numpy(chain_schema(), chain_db())
+    sess = session(db, capacity=0)
+    for _ in range(2):
+        r = sess.route(Q_MISS)
+        assert r.tier == "fallback_scan" and r.scanned
+        assert_answer(r.value, db, Q_MISS)
+    assert sess.router.n_plans_compiled == 2
+    assert sess.routing_stats()["cache_size"] == 0
+
+
+def test_unroutable_udaf_falls_back_uncached():
+    """An untagged Lambda has no stable signature: it can never be matched
+    or cached, but it still gets a correct one-shot verified scan."""
+    db = from_numpy(chain_schema(), chain_db())
+    sess = session(db)
+    q = query("q_anon", ["x2"], [agg(Lambda(
+        ("x1",), lambda a, p: (a * 2).astype(np.float32)))])   # no tag=
+    exp = fresh_answer(db, q)
+    for _ in range(2):
+        r = sess.route(q)
+        assert r.tier == "fallback_scan" and r.scanned
+        np.testing.assert_allclose(np.asarray(r.value), np.asarray(exp),
+                                   rtol=1e-3, atol=1e-3)
+    assert sess.router.n_plans_compiled == 2      # never cached
+    assert sess.routing_stats()["cache_size"] == 0
+
+
+# -- admission gate -----------------------------------------------------------
+
+def test_admission_rejects_corrupted_plan(monkeypatch):
+    """Serving-time compiles pass the static verifier before answering or
+    entering the cache: a corrupted plan raises the structured invariant
+    error and is NOT cached."""
+    db = from_numpy(chain_schema(), chain_db())
+    sess = session(db)
+    orig = QueryRouter._compile_fresh
+
+    def corrupting(self, q):
+        handle = orig(self, q)
+        plan = handle.compiled.plan
+        steps = list(plan.schedule.steps)
+        steps[0] = dataclasses.replace(steps[0], rel="NoSuchRel")
+        plan.schedule = dataclasses.replace(plan.schedule,
+                                            steps=tuple(steps))
+        return handle
+
+    monkeypatch.setattr(QueryRouter, "_compile_fresh", corrupting)
+    with pytest.raises(PlanInvariantError) as ei:
+        sess.route(Q_MISS)
+    assert ei.value.invariant == "schedule-topo"
+    rt = sess.router
+    assert rt.n_admission_failures == 1
+    assert sess.routing_stats()["cache_size"] == 0
+
+    # the gate is unconditional — un-corrupted compiles admit fine after
+    monkeypatch.setattr(QueryRouter, "_compile_fresh", orig)
+    r = sess.route(Q_MISS)
+    assert r.tier == "compiled"
+    assert_answer(r.value, db, Q_MISS)
+
+
+# -- params -------------------------------------------------------------------
+
+def test_params_skip_maintained_sources():
+    """Maintained views bake their params at init, so an explicit-params
+    route must NOT answer from them — it compiles (then scan-hits) a plan
+    that binds params per run."""
+    db = from_numpy(chain_schema(), chain_db())
+    sess = session(db)
+    h = sess.views([query("cube_t", ["x4"],
+                          [agg(Var("u"), Delta("x1", "==", Param("t")))])],
+                   maintain=True)
+    h.run(params={"t": 1.0})
+    q = query("q_t", ["x4"], [agg(Var("u"), Delta("x1", "==", Param("t")))])
+
+    r1 = sess.route(q, params={"t": 1.0})
+    assert r1.tier == "compiled" and r1.scanned
+    r2 = sess.route(q, params={"t": 2.0})
+    assert r2.tier == "exact" and r2.scanned          # cached plan, rebinds
+    for t, r in ((1.0, r1), (2.0, r2)):
+        exp = session(db).views(
+            [query("qo", ["x4"],
+                   [agg(Var("u"), Delta("x1", "==", Param("t")))])]) \
+            .run(params={"t": t})["qo"]
+        np.testing.assert_allclose(np.asarray(r.value), np.asarray(exp),
+                                   rtol=1e-3, atol=1e-3, err_msg=f"t={t}")
+
+    # without params, the maintained view answers exactly (its baked t=1.0)
+    r3 = sess.route(q)
+    assert r3.tier == "exact" and not r3.scanned
+    np.testing.assert_allclose(np.asarray(r3.value), np.asarray(r1.value),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_batched_params_rejected_with_pointer():
+    db = from_numpy(chain_schema(), chain_db())
+    sess = session(db)
+    q = query("q_b", [], [agg(Lambda(
+        ("x1",), lambda a, p: p["m"][..., a], tag="mask",
+        param_refs=(Param("m", batched=True),)))])
+    with pytest.raises(ValueError, match="run_batched"):
+        sess.route(q, params={"m": np.ones((2, 3), np.float32)})
+
+
+# -- facade + telemetry -------------------------------------------------------
+
+def test_front_doors_and_workload_records():
+    """Database.query / ViewServer.query return the plain tensor; every
+    routed query lands in the workload recorder with its route tier, and
+    explain() surfaces the routing mix."""
+    db = from_numpy(chain_schema(), chain_db())
+    sess = session(db)
+    h = sess.views(CUBE, maintain=True)
+    srv = h.serve()                           # started: epoch 0 published
+
+    v1 = sess.query(Q_SUB)                    # session front door
+    v2 = srv.query(Q_SUB)                     # serving front door
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2))
+    sess.query(Q_MISS)
+
+    by_sig = sess.workload.by_signature()
+    routes = {}
+    for entry in by_sig.values():
+        for tier, n in entry["routes"].items():
+            routes[tier] = routes.get(tier, 0) + n
+    assert routes == {"subsumed": 2, "compiled": 1}
+
+    rep = h.explain()
+    assert rep.routing is not None and rep.routing["n_queries"] == 3
+    assert "routing:" in rep.summary() and "hit_rate" in rep.summary()
+
+    # a server constructed without a router says how to get one
+    from repro.serve.views import ViewServer
+    bare = ViewServer(h.maintained)
+    with pytest.raises(ValueError, match="router"):
+        bare.query(Q_SUB)
+
+
+def test_router_capacity_validation():
+    db = from_numpy(chain_schema(), chain_db())
+    with pytest.raises(ValueError, match="route_cache_capacity"):
+        session(db, capacity=-1)
+    sess = session(db)
+    with pytest.raises(ValueError, match="capacity"):
+        QueryRouter(sess, capacity=True)
+
+
+# -- sharded equivalence ------------------------------------------------------
+
+def test_sharded_routing_matches_local(subproc):
+    """Routing over a 4-device mesh session: same tiers, same answers as
+    the single-device session, before and after a delta fold — the router
+    is mesh-agnostic by construction (replicated epoch views)."""
+    subproc("""
+import numpy as np
+import jax
+
+import repro
+from repro.core import COUNT, query, schema, sum_of
+from repro.data import DeltaBatchUpdate, apply_delta, from_numpy
+
+S = schema(
+    [("x1", "categorical", 3), ("x2", "key", 4), ("x3", "key", 5),
+     ("x4", "categorical", 3), ("u", "continuous", 0)],
+    [("R1", ["x1", "x2"]), ("R2", ["x2", "x3", "u"]), ("R3", ["x3", "x4"])])
+rng = np.random.default_rng(7)
+tables = {
+    "R1": {"x1": rng.integers(0, 3, 17), "x2": rng.integers(0, 4, 17)},
+    "R2": {"x2": rng.integers(0, 4, 29), "x3": rng.integers(0, 5, 29),
+           "u": rng.normal(size=29).astype(np.float32)},
+    "R3": {"x3": rng.integers(0, 5, 13), "x4": rng.integers(0, 3, 13)}}
+CUBE = [query("cube_g14", ["x1", "x4"], [COUNT, sum_of("u")])]
+PROBES = [query("q_exact", ["x4", "x1"], [sum_of("u"), COUNT]),
+          query("q_sub", ["x4"], [COUNT]),
+          query("q_miss", ["x3"], [COUNT])]
+
+mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+cfg = repro.ExecutionConfig(block_size=8)
+db = from_numpy(S, tables)
+local = repro.connect(db, config=cfg)
+sharded = repro.connect(db, config=cfg.replace(mesh=mesh))
+hl = local.views(CUBE, maintain=True)
+hs = sharded.views(CUBE, maintain=True)
+hl.run(); hs.run()
+
+def check(tag, oracle_db):
+    for q in PROBES:
+        rl, rs = local.route(q), sharded.route(q)
+        assert rl.tier == rs.tier, (tag, q.name, rl.tier, rs.tier)
+        np.testing.assert_allclose(
+            np.asarray(rs.value), np.asarray(rl.value),
+            rtol=1e-3, atol=1e-3, err_msg=f"{tag} {q.name}")
+        exp = repro.connect(oracle_db, config=cfg).views([q]).run()[q.name]
+        np.testing.assert_allclose(
+            np.asarray(rs.value), np.asarray(exp),
+            rtol=1e-3, atol=1e-3, err_msg=f"{tag} {q.name} vs fresh")
+
+check("init", db)
+upd = DeltaBatchUpdate().insert(
+    "R2", {"x2": rng.integers(0, 4, 5), "x3": rng.integers(0, 5, 5),
+           "u": rng.normal(size=5).astype(np.float32)})
+hl.apply(upd); hs.apply(upd)
+# scan-tier answers read Database.data — keep the base snapshot current
+# alongside the maintained fold (the session contract; DESIGN.md §13)
+new_db = apply_delta(db, upd)
+local.data = new_db
+sharded.data = new_db
+check("after-fold", new_db)
+
+st = sharded.routing_stats()
+assert st["tiers"]["exact"] >= 3 and st["tiers"]["subsumed"] == 2
+assert st["n_admission_failures"] == 0
+print("OK")
+""", 4)

@@ -17,6 +17,12 @@ baseline file carries:
   exercised, one recorded workload signature per served view, a
   non-degenerate latency distribution, and a non-empty trace export;
   p50/p99 read latency and ticks/s gate loose.
+* ``BENCH_routing.json``: ad-hoc query routing
+  (``benchmarks/bench_routing.py``).  Contract fields gate hard — every
+  tier allclose to a from-scratch compile (a routed answer that drifts is
+  a soundness bug, not noise), zero admission failures, LRU eviction
+  exercised, and the workload hit rate within ``--ratio-tol`` of
+  baseline; per-tier routed latencies gate loose.
 
 Two classes of metric, gated differently:
 
@@ -129,6 +135,37 @@ def check(current: dict, baseline: dict, *, time_tol: float,
         yield ("serving/ticks_per_s", baseline["ticks_per_s"], cur_tps,
                f">= {floor:.3g}",
                cur_tps is not None and cur_tps >= floor)
+
+    # --- BENCH_routing.json schema -----------------------------------
+    if "route_hit_rate" in baseline:
+        # contract fields: hard gates (routing soundness, not noise)
+        for c in ("allclose_exact", "allclose_subsumed",
+                  "allclose_compiled", "evicted_recompiles"):
+            yield (f"routing/{c}", baseline.get(c), current.get(c),
+                   "== True", bool(current.get(c)))
+        yield ("routing/n_admission_failures",
+               baseline.get("n_admission_failures"),
+               current.get("n_admission_failures"), "== 0",
+               current.get("n_admission_failures") == 0)
+        yield ("routing/n_evictions", baseline.get("n_evictions"),
+               current.get("n_evictions"), ">= 1",
+               (current.get("n_evictions") or 0) >= 1)
+        hr_floor = baseline["route_hit_rate"] * (1.0 - ratio_tol)
+        cur_hr = current.get("route_hit_rate")
+        yield ("routing/route_hit_rate", baseline["route_hit_rate"], cur_hr,
+               f">= {hr_floor:.3g}",
+               cur_hr is not None and cur_hr >= hr_floor)
+        # routed latencies: loose gates (runner noise)
+        for t in ("route_exact_p50_us", "route_exact_p99_us",
+                  "route_subsumed_p50_us", "route_subsumed_p99_us",
+                  "route_cached_scan_p50_us", "route_cached_scan_p99_us",
+                  "route_compile_us"):
+            if t not in baseline:
+                continue
+            limit = baseline[t] * (1.0 + time_tol)
+            cur_t = current.get(t)
+            yield (f"routing/{t}", baseline[t], cur_t, f"<= {limit:.3g}",
+                   cur_t is not None and cur_t <= limit)
 
     for name, base in sorted(baseline.get("sharded", {}).items()):
         cur = current.get("sharded", {}).get(name)

@@ -5,14 +5,17 @@ Copies a fresh payload (by default the one in the working directory, or
 regenerates it first with ``--run``) over its committed baseline under
 ``benchmarks/baselines/`` after validating its shape.  Default is the
 kernel-roofline baseline (``BENCH_kernels.json``); ``--ivm`` ratchets the
-IVM/sharded baseline (``BENCH_ivm.json``) and ``--serving`` the
-sustained-load serving baseline (``BENCH_serving.json``) instead.  Commit
-the result deliberately — the diff IS the perf-trajectory claim the CI
-gate (``tools/perf_gate.py``) enforces from then on.
+IVM/sharded baseline (``BENCH_ivm.json``), ``--serving`` the
+sustained-load serving baseline (``BENCH_serving.json``), and
+``--routing`` the ad-hoc routing baseline (``BENCH_routing.json``)
+instead.  Commit the result deliberately — the diff IS the
+perf-trajectory claim the CI gate (``tools/perf_gate.py``) enforces from
+then on.
 
     BENCH_SCALE=0.01 PYTHONPATH=src python tools/update_perf_baseline.py --run
     BENCH_SCALE=0.01 PYTHONPATH=src python tools/update_perf_baseline.py --run --ivm
     BENCH_SCALE=0.01 PYTHONPATH=src python tools/update_perf_baseline.py --run --serving
+    BENCH_SCALE=0.01 PYTHONPATH=src python tools/update_perf_baseline.py --run --routing
 """
 
 from __future__ import annotations
@@ -30,6 +33,8 @@ DEFAULT_DST_IVM = os.path.join(REPO, "benchmarks", "baselines",
                                "BENCH_ivm.json")
 DEFAULT_DST_SERVING = os.path.join(REPO, "benchmarks", "baselines",
                                    "BENCH_serving.json")
+DEFAULT_DST_ROUTING = os.path.join(REPO, "benchmarks", "baselines",
+                                   "BENCH_routing.json")
 
 
 def validate(payload: dict) -> None:
@@ -91,12 +96,37 @@ def validate_serving(payload: dict) -> None:
                          "views)")
 
 
+def validate_routing(payload: dict) -> None:
+    """Routing soundness must hold before the latency split means
+    anything — a baseline captured from a drifting router would gate
+    future runs on garbage."""
+    for c in ("allclose_exact", "allclose_subsumed", "allclose_compiled"):
+        if not payload.get(c):
+            raise SystemExit(f"refusing to ratchet: {c} is false — a routed "
+                             "answer disagrees with the from-scratch "
+                             "compile; fix soundness before moving the "
+                             "perf anchor")
+    if payload.get("n_admission_failures") != 0:
+        raise SystemExit("refusing to ratchet: the admission gate rejected "
+                         "a router-compiled plan")
+    if (payload.get("n_evictions") or 0) < 1 \
+            or not payload.get("evicted_recompiles"):
+        raise SystemExit("refusing to ratchet: LRU eviction churn never "
+                         "exercised")
+    if not payload.get("n_queries") or not payload.get("route_hit_rate"):
+        raise SystemExit("refusing to ratchet: degenerate routed workload "
+                         f"(n_queries={payload.get('n_queries')}, "
+                         f"hit_rate={payload.get('route_hit_rate')})")
+
+
 _MODES = {
     "kernels": ("BENCH_kernels.json", DEFAULT_DST, "bench_kernels",
                 validate),
     "ivm": ("BENCH_ivm.json", DEFAULT_DST_IVM, "bench_ivm", validate_ivm),
     "serving": ("BENCH_serving.json", DEFAULT_DST_SERVING, "bench_serving",
                 validate_serving),
+    "routing": ("BENCH_routing.json", DEFAULT_DST_ROUTING, "bench_routing",
+                validate_routing),
 }
 
 
@@ -110,13 +140,20 @@ def main(argv=None) -> int:
     ap.add_argument("--serving", action="store_true",
                     help="ratchet the sustained-load serving baseline "
                     "(BENCH_serving.json) instead of the kernel roofline")
+    ap.add_argument("--routing", action="store_true",
+                    help="ratchet the ad-hoc routing baseline "
+                    "(BENCH_routing.json) instead of the kernel roofline")
     ap.add_argument("--run", action="store_true",
                     help="regenerate --src via the benchmark module before "
                     "promoting")
     args = ap.parse_args(argv)
-    if args.ivm and args.serving:
-        raise SystemExit("--ivm and --serving are mutually exclusive")
-    mode = "ivm" if args.ivm else ("serving" if args.serving else "kernels")
+    picked = [m for m, flag in
+              [("ivm", args.ivm), ("serving", args.serving),
+               ("routing", args.routing)] if flag]
+    if len(picked) > 1:
+        raise SystemExit("--ivm / --serving / --routing are mutually "
+                         "exclusive")
+    mode = picked[0] if picked else "kernels"
     default_src, default_dst, mod, validator = _MODES[mode]
     src = args.src or default_src
     dst = args.dst or default_dst
@@ -153,6 +190,12 @@ def main(argv=None) -> int:
               f"ticks/s={payload['ticks_per_s']:.1f} "
               f"evictions={payload['n_evictions']} "
               f"signatures={payload['served_view_signatures']}")
+    elif mode == "routing":
+        print(f"  routing: exact_p50={payload['route_exact_p50_us']:.0f}us "
+              f"subsumed_p50={payload['route_subsumed_p50_us']:.0f}us "
+              f"compile={payload['route_compile_us']:.0f}us "
+              f"hit_rate={payload['route_hit_rate']:.3f} "
+              f"evictions={payload['n_evictions']}")
     else:
         for name, e in payload["e2e"].items():
             print(f"  e2e/{name}: speedup_fused_auto="
